@@ -1,0 +1,75 @@
+"""Paper Tables 4-5 / Fig 2b-c analogue: our packed compilation pipeline vs
+execution-strategy baselines, per model forward pass.
+
+The paper compares IREE(SVE) against ExecuTorch / TorchInductor / eager —
+i.e. whole-graph packed compilation vs library dispatch vs plain graph
+compilation vs op-by-op execution.  The analogues here (same host, same
+model weights, reduced configs):
+
+  - packed      : jit, scalable packed layouts + propagation  (IREE-SVE)
+  - compiled    : jit, unpacked XLA default                   (Inductor)
+  - eager       : un-jitted op-by-op dispatch, unpacked       (PyTorch eager)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs import RunConfig, ShapeSpec, get_config, reduced_config
+from repro.models.model import build_model
+
+# model roster mirrors the paper's Tab. 2 (consumer-inference regime:
+# batch 1, modest sequence), reduced configs for CPU execution.
+ROSTER = ["smollm2-135m", "qwen2-7b", "qwen3-8b", "whisper-small",
+          "rwkv6-1.6b", "internvl2-26b"]
+
+
+def _batch(m, cfg, b, s):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    out = {"tokens": jax.random.randint(ks[0], (b, m.text_len), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(ks[1], (b, m.enc_len, cfg.d_model))
+    if cfg.family == "vlm":
+        out["patches"] = jax.random.normal(ks[1], (b, cfg.vision_tokens,
+                                                   cfg.d_model))
+    return out
+
+
+def run(iters: int = 3, seq: int = 128) -> None:
+    base = RunConfig(param_dtype="float32", compute_dtype="float32",
+                     remat=False)
+    shape = ShapeSpec("bench", seq, 1, "prefill")
+    for arch in ROSTER:
+        cfg = reduced_config(get_config(arch))
+        runs = {
+            "packed": dataclasses.replace(base, layout_policy="scalable"),
+            "compiled": dataclasses.replace(base, layout_policy="unpacked"),
+        }
+        params = None
+        times = {}
+        for name, run_cfg in runs.items():
+            m = build_model(cfg, run_cfg, shape)
+            if params is None:
+                params = m.init(jax.random.PRNGKey(0))
+            batch = _batch(m, cfg, 1, seq)
+            fwd = jax.jit(lambda p, b_, m_=m: m_.forward(p, b_)[0])
+            times[name] = time_fn(fwd, params, batch, iters=iters)
+        # eager: same ops, dispatched without jit (op-by-op)
+        m = build_model(cfg, runs["compiled"], shape)
+        batch = _batch(m, cfg, 1, seq)
+        with jax.disable_jit():
+            times["eager"] = time_fn(lambda p, b_: m.forward(p, b_)[0],
+                                     params, batch, warmup=1, iters=1)
+        emit(f"t45_packed_{arch}", times["packed"],
+             f"compiled/packed={times['compiled']/times['packed']:.2f}x;"
+             f"eager/packed={times['eager']/times['packed']:.2f}x")
+        emit(f"t45_compiled_{arch}", times["compiled"], "")
+        emit(f"t45_eager_{arch}", times["eager"], "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Kernel-level benchmark: Pallas mmt4d (paper Listing 2 analogue) block-size
+sweep + pack/unpack overhead vs matmul (paper §4.1 amortization argument).
+
+Pallas timings are interpret-mode on CPU (semantics, not TPU wall-time);
+the structural numbers — VMEM working set per block config, arithmetic
+intensity of the packed tiles — are the TPU-relevant output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import make_layout, packing, presets
+from repro.kernels.mmt4d.ops import pick_blocks
+from repro.kernels.mmt4d.ref import mmt4d_ref
+
+
+def run(iters: int = 3) -> None:
+    hw = presets["tpu_v5e"]
+    lay = make_layout("scalable", hw, jnp.float32)
+
+    m, k, n = 512, 512, 512
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+
+    # pack overhead vs compute (paper: packing amortized over matmul)
+    t_pack = time_fn(jax.jit(lambda x: packing.pack_lhs(x, lay)), a,
+                     iters=iters)
+    ap = packing.pack_lhs(a, lay)
+    bp = packing.pack_rhs(b, lay)
+    t_mm = time_fn(jax.jit(mmt4d_ref), ap, bp, iters=iters)
+    emit("kern_pack_512", t_pack, f"pack/matmul={t_pack / t_mm:.3f}")
+    emit("kern_mmt4d_512", t_mm, "")
+
+    # BlockSpec working-set sweep: VMEM bytes per (TM, TN) config
+    m_o, _, m_r, k_r = ap.shape
+    n_o, _, n_r, _ = bp.shape
+    for tm, tn in [(4, 4), (8, 8), (16, 4), (16, 8)]:
+        a_b = tm * m_r * k_r * 4
+        b_b = tn * n_r * k_r * 4
+        acc = tm * m_r * tn * n_r * 4
+        tot = a_b + b_b + 2 * acc
+        flops_per_byte = (2 * tm * m_r * tn * n_r * k_r) / (a_b + b_b)
+        emit(f"kern_blockspec_{tm}x{tn}", float(tot),
+             f"vmem_bytes={tot};ai={flops_per_byte:.1f}flops/B;"
+             f"fits={'yes' if tot < hw.vmem_bytes // 4 else 'no'}")
+    tm, tn = pick_blocks(m_o, n_o, m_r, n_r, k_r, 4, hw)
+    emit("kern_blockspec_auto", 0.0, f"picked TM={tm},TN={tn}")
+
+
+if __name__ == "__main__":
+    run()

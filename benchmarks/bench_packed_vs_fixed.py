@@ -1,0 +1,53 @@
+"""Paper Table 3 / Fig 2a analogue: scalable (SVE) vs fixed (NEON) vs
+unpacked codegen on matmul shapes drawn from the evaluated models.
+
+The paper compares IREE(SVE) vs IREE(NEON) latency on the same chip: same
+compiler stack, different code-generation strategy.  Here: same JAX/XLA
+stack, the three layout policies of ``repro.core.layout``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import make_layout, matmul, packed_matmul, presets
+from repro.core.layout import LayoutPolicy
+
+# (M, K, N) matmul shapes from the evaluated models (batch 1 x seq 128
+# tokens against the model's projection matrices — the consumer-inference
+# regime of the paper).
+MODEL_MATMULS = {
+    "smollm2_mlp": (128, 576, 1536),
+    "smollm2_logits": (128, 576, 49152),
+    "qwen2_qkv": (128, 3584, 4608),
+    "qwen2_mlp": (128, 3584, 18944),
+    "whisper_mlp": (128, 768, 3072),
+    "square_512": (512, 512, 512),
+    "square_1024": (1024, 1024, 1024),
+    "skinny_k": (2048, 512, 2048),
+}
+
+
+def run(iters: int = 5) -> None:
+    hw = presets["tpu_v5e"]
+    for name, (m, k, n) in MODEL_MATMULS.items():
+        a = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+        times = {}
+        for pol in ("scalable", "fixed", "unpacked"):
+            lay = make_layout(pol, hw, jnp.float32)
+            fn = jax.jit(lambda a_, b_, lay_=lay: matmul(a_, b_, lay_))
+            times[pol] = time_fn(fn, a, b, iters=iters)
+        speedup_vs_fixed = times["fixed"] / times["scalable"]
+        speedup_vs_unpacked = times["unpacked"] / times["scalable"]
+        emit(f"t3_scalable_{name}", times["scalable"],
+             f"fixed/scalable={speedup_vs_fixed:.2f}x;"
+             f"unpacked/scalable={speedup_vs_unpacked:.2f}x")
+        emit(f"t3_fixed_{name}", times["fixed"], "")
+        emit(f"t3_unpacked_{name}", times["unpacked"], "")
+
+
+if __name__ == "__main__":
+    run()

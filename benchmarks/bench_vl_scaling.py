@@ -1,0 +1,86 @@
+"""Paper Fig. 3 analogue: vector-length scaling study.
+
+The paper runs the SAME binary on gem5 models that differ only in SVE
+width (128/256/512) and shows near-ideal scaling on compute-bound matmuls,
+collapse once memory-bound, and partial end-to-end scaling (non-matmul ops
+don't scale).
+
+Here, the same controlled experiment against the roofline model of
+hypothetical TPUs that differ ONLY in vector width (``HardwareSpec.scaled``:
+lanes x2/x4 => peak FLOPs x2/x4; memory system fixed — the same isolation
+the paper's gem5 study makes).  For each workload we lower the *same layout-
+parametric code* at each VL, derive compute/memory roofline times from the
+compiled HLO, and report speedup vs VL-128.  Square matmuls N=64..2048 +
+skinny-K (2048x2048x512) + SmolLM2-135M forward, mirroring the figure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import RunConfig, ShapeSpec, get_config, reduced_config
+from repro.core import make_layout, packed_matmul, presets
+from repro.models.model import build_model
+from repro.roofline.hlo_cost import parse_hlo
+
+VLS = ["tpu_vl128", "tpu_vl256", "tpu_vl512"]
+
+
+def _roofline_time(fn, specs, hw, dtype=jnp.float32,
+                   compulsory_bytes: float | None = None) -> float:
+    """max(compute, memory) seconds from the compiled HLO — the same
+    bound the gem5 study measures in cycles.
+
+    ``compulsory_bytes``: for the isolated-matmul cases, the memory term is
+    the compulsory traffic (each operand streamed once) — the gem5 study's
+    cache-resident setting where tiles stay in L2/L3 between reuses.  The
+    end-to-end case uses the full parsed HBM-traffic model instead.
+    """
+    compiled = jax.jit(fn).lower(*specs).compile()
+    cost = parse_hlo(compiled.as_text())
+    peak = hw.peak_flops(dtype)
+    nbytes = compulsory_bytes if compulsory_bytes is not None else cost.hbm_bytes
+    return max(cost.dot_flops / peak, nbytes / hw.hbm_bw)
+
+
+def run(**_) -> None:
+    # -- square + skinny-K matmuls --------------------------------------
+    cases = {f"mm{n}": (n, n, n) for n in (64, 128, 256, 512, 1024, 2048)}
+    cases["skinnyK"] = (2048, 512, 2048)
+    for name, (m, k, n) in cases.items():
+        base = None
+        for vl in VLS:
+            hw = presets[vl]
+            lay = make_layout("scalable", hw, jnp.float32)
+            fn = lambda a, b, lay_=lay: packed_matmul(a, b, lay_)
+            compulsory = 4.0 * (m * k + k * n + m * n)
+            t = _roofline_time(
+                fn, (jax.ShapeDtypeStruct((m, k), jnp.float32),
+                     jax.ShapeDtypeStruct((k, n), jnp.float32)), hw,
+                compulsory_bytes=compulsory)
+            base = base or t
+            emit(f"fig3_{name}_{vl}", t * 1e6,
+                 f"speedup_vs_vl128={base / t:.2f}x")
+
+    # -- end-to-end SmolLM2-135M forward (seq 32, like the paper) -------
+    cfg = get_config("smollm2-135m")
+    shape = ShapeSpec("fig3", 32, 1, "prefill")
+    base = None
+    for vl in VLS:
+        hw = presets[vl]
+        run_cfg = RunConfig(param_dtype="float32", compute_dtype="float32",
+                            remat=False)
+        mdl = build_model(cfg, run_cfg, shape, hw=hw)
+        params_sds = jax.eval_shape(mdl.init, jax.random.PRNGKey(0))
+        batch_sds = mdl.input_specs("prefill")
+        t = _roofline_time(lambda p, b: mdl.forward(p, b)[0],
+                           (params_sds, batch_sds), hw)
+        base = base or t
+        emit(f"fig3_smollm2_e2e_{vl}", t * 1e6,
+             f"speedup_vs_vl128={base / t:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

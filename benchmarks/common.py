@@ -1,0 +1,34 @@
+"""Benchmark utilities: timing and CSV emission.
+
+All wall-clock numbers are CPU-host measurements (TPU is the modelled
+target); they compare *code-generation strategies* against each other on
+identical hardware, which is exactly the paper's Table 3/4/5 methodology
+(same device, different codegen).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["time_fn", "emit"]
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw) -> float:
+    """Median wall-time (us) of ``fn(*args)`` with jit warmup."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,42 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV:
+  t3_*    Table 3 / Fig 2a  (scalable vs fixed vs unpacked codegen)
+  t45_*   Tables 4-5 / Fig 2b-c (packed pipeline vs compiled vs eager)
+  fig3_*  Fig 3 (vector-length scaling study, roofline-model times)
+  kern_*  kernel-level: pack amortization + BlockSpec working sets
+  cell_*  roofline summary per dry-run cell (reads experiments/dryrun JSONs
+          when present; see EXPERIMENTS.md)
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _cells() -> None:
+    for path in sorted(glob.glob("experiments/dryrun/*.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        name = os.path.basename(path)[:-5]
+        bound = rec.get("step_time_bound_s", 0.0) * 1e6
+        print(f"cell_{name},{bound:.1f},"
+              f"bottleneck={rec.get('bottleneck')};"
+              f"roofline_frac={rec.get('roofline_fraction', 0):.3f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (bench_packed_vs_fixed, bench_frameworks,
+                            bench_vl_scaling, bench_kernels)
+    bench_packed_vs_fixed.run()
+    bench_frameworks.run()
+    bench_vl_scaling.run()
+    bench_kernels.run()
+    _cells()
+
+
+if __name__ == "__main__":
+    main()

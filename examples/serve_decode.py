@@ -1,0 +1,56 @@
+"""Batched serving example: prefill + KV-cache decode with pre-packed
+weights (the paper's amortized standalone packing, §4.1).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py --arch smollm2-135m
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import RunConfig, ShapeSpec, get_config, reduced_config
+from repro.models.model import build_model
+from repro.serving.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm2-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=48)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--sample", action="store_true")
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config(args.arch))
+    shape = ShapeSpec("serve", args.max_len, args.batch, "decode")
+    run = RunConfig(param_dtype="float32", compute_dtype="float32",
+                    remat=False)
+    model = build_model(cfg, run, shape)
+    params = model.init(jax.random.PRNGKey(0))
+
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len),
+                                          0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, args.max_len // cfg.audio_downsample, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (args.batch, cfg.vision_tokens, cfg.d_model))
+
+    engine = Engine(model, params)           # weights pre-packed here
+    t0 = time.perf_counter()
+    out = engine.generate(batch, args.new_tokens, greedy=not args.sample)
+    dt = time.perf_counter() - t0
+    total = args.batch * args.new_tokens
+    print(f"[serve] {cfg.name}: {out.shape} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s on CPU host)")
+    print(out[:, :12])
+
+
+if __name__ == "__main__":
+    main()

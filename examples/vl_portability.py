@@ -1,0 +1,52 @@
+"""The paper's headline demo: vector-length-agnostic execution.
+
+One model, one set of weights, one code path — executed under hardware
+descriptors whose vector width differs 4x.  The layouts (and kernels built
+on them) adapt at instantiation time; outputs agree bitwise-ish (fp32
+reduction order only).  This is Fig. 1 + Fig. 3's premise as a runnable
+script, plus the NEON-analogue counterexample: the FIXED layout keeps its
+compile-time tiles and simply cannot exploit the wider unit.
+
+Run:  PYTHONPATH=src python examples/vl_portability.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import RunConfig, ShapeSpec, get_config, reduced_config
+from repro.core import make_layout, presets
+from repro.models.model import build_model
+
+
+def main():
+    cfg = reduced_config(get_config("smollm2-135m"), layers=2)
+    shape = ShapeSpec("demo", 32, 2, "train")
+    run = RunConfig(param_dtype="float32", compute_dtype="float32",
+                    remat=False)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg.vocab)}
+
+    params, ref = None, None
+    print(f"{'hardware':10s} {'scalable tiles':>18s} {'fixed tiles':>14s} "
+          f"{'max |Δlogits|':>14s}")
+    for hwname in ("tpu_vl128", "tpu_vl256", "tpu_vl512"):
+        hw = presets[hwname]
+        model = build_model(cfg, run, shape, hw=hw)
+        if params is None:
+            params = model.init(jax.random.PRNGKey(0))
+        logits, _ = model.forward(params, batch)
+        if ref is None:
+            ref = np.asarray(logits)
+        err = float(np.max(np.abs(np.asarray(logits) - ref)))
+        s = make_layout("scalable", hw, jnp.float32)
+        f = make_layout("fixed", hw, jnp.float32)
+        print(f"{hwname:10s} {f'{s.m_r}x{s.n_r}x{s.k_r}':>18s} "
+              f"{f'{f.m_r}x{f.n_r}x{f.k_r}':>14s} {err:14.2e}")
+
+    print("\nsame weights, same code; scalable tiles follow the hardware, "
+          "fixed tiles do not (the paper's SVE-vs-NEON dichotomy).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""§Perf hillclimb driver: run RunConfig variants on the three chosen cells
+and record per-variant roofline terms (experiments/perf/<tag>.json).
+
+Cells (chosen from the baseline table):
+  - qwen2-7b x train_4k      : most representative of the paper's technique
+                               (dense, matmul-dominated)
+  - qwen3-moe-235b x train_4k: most collective-bound
+  - <worst-roofline cell>    : memory-bound decode/prefill representative
+
+Usage: PYTHONPATH=src python experiments/hillclimb.py [--cell qwen2|moe|decode]
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs import RunConfig
+from repro.launch.dryrun import run_cell
+
+BASE = RunConfig(microbatch=8)
+
+VARIANTS = {
+    # paper-faithful layout ablation: propagation ON (paper §4.3) vs OFF
+    "baseline": BASE,
+    "noprop": dataclasses.replace(BASE, propagate=False),
+    "unpacked": dataclasses.replace(BASE, layout_policy="unpacked"),
+    "fixed": dataclasses.replace(BASE, layout_policy="fixed"),
+    # distribution iterations
+    "nofsdp": dataclasses.replace(BASE, fsdp=False),
+    "mb4": dataclasses.replace(BASE, microbatch=4),
+    "mb16": dataclasses.replace(BASE, microbatch=16),
+    "noseqkv": dataclasses.replace(BASE, seq_shard_kv=False),
+    "moelocal": dataclasses.replace(BASE, moe_local_dispatch=True),
+}
+
+CELLS = {
+    "qwen2": ("qwen2-7b", "train_4k",
+              ["baseline", "noprop", "unpacked", "fixed", "nofsdp", "mb4",
+               "mb16"]),
+    "moe": ("qwen3-moe-235b-a22b", "train_4k",
+            ["baseline", "noprop", "nofsdp", "mb4", "moelocal"]),
+    "decode": ("qwen2-7b", "decode_32k",
+               ["baseline", "noprop", "unpacked", "noseqkv"]),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all",
+                    choices=["all", *CELLS.keys()])
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    todo = CELLS if args.cell == "all" else {args.cell: CELLS[args.cell]}
+    for cell, (arch, shape, variants) in todo.items():
+        if args.variant:
+            variants = [args.variant]
+        for v in variants:
+            run = VARIANTS[v]
+            try:
+                rec = run_cell(arch, shape, "pod", run, out_dir=None,
+                               verbose=False)
+                rec["variant"] = v
+                tag = f"{cell}_{v}"
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                mem = (rec.get("memory_per_device") or {})
+                print(f"[perf] {cell:7s} {v:9s}: "
+                      f"cmp {rec['compute_s']*1e3:9.1f}ms "
+                      f"mem {rec['memory_s']*1e3:9.1f}ms "
+                      f"coll {rec['collective_s']*1e3:9.1f}ms "
+                      f"temp {mem.get('temp_size_in_bytes', 0)/2**30:6.1f}GiB "
+                      f"bound={rec['bottleneck']}")
+            except Exception as e:
+                print(f"[perf] {cell} {v}: FAIL {str(e)[:200]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.configs.base import ModelConfig, RunConfig, ShapeSpec, SHAPES, reduced_config
+from repro.configs.registry import ARCHS, ASSIGNED, get_config, cells, cell_status
+
+__all__ = ["ModelConfig", "RunConfig", "ShapeSpec", "SHAPES", "reduced_config",
+           "ARCHS", "ASSIGNED", "get_config", "cells", "cell_status"]

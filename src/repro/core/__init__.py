@@ -1,0 +1,27 @@
+"""Core library: scalable packed layouts (the paper's contribution) in JAX.
+
+Public surface:
+  - hardware.HardwareSpec / query        — runtime hardware descriptor (VL analogue)
+  - layout.make_layout / LayoutPolicy    — VL-parametric tile functions
+  - packing.pack_lhs/pack_rhs/unpack_out — explicit layout transformation
+  - mmt4d.mmt4d / packed_matmul          — compute on packed operands
+  - propagation.PackedArray              — packed-domain pointwise/norm ops
+  - linear.linear_apply / MatmulContext  — the model-facing matmul entry point
+"""
+
+from repro.core.hardware import HardwareSpec, presets, query
+from repro.core.layout import LayoutPolicy, PackedLayout, make_layout, MICROKERNELS
+from repro.core.mmt4d import Epilogue, mmt4d, packed_matmul, matmul
+from repro.core.propagation import PackedArray, pack_activation
+from repro.core.linear import (MatmulContext, linear_init, linear_apply,
+                               batched_linear_apply, prepack_params)
+from repro.core import packing
+
+__all__ = [
+    "HardwareSpec", "presets", "query",
+    "LayoutPolicy", "PackedLayout", "make_layout", "MICROKERNELS",
+    "Epilogue", "mmt4d", "packed_matmul", "matmul",
+    "PackedArray", "pack_activation",
+    "MatmulContext", "linear_init", "linear_apply", "batched_linear_apply",
+    "prepack_params", "packing",
+]

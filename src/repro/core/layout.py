@@ -1,0 +1,193 @@
+"""Scalable packed layouts (paper §4.2).
+
+A packed layout reorganizes a matrix into register-level tiles:
+
+    A  in R^{M x K}            (row-major)
+    A_pack in R^{ceil(M/m_r) x ceil(K/k_r) x m_r x k_r}
+    A_pack[i_o, k_o, i_i, k_i] = A[i_o*m_r + i_i, k_o*k_r + k_i]
+
+The paper's contribution is to make the tile sizes *functions of the hardware
+vector length* instead of compile-time constants:
+
+    m_r = f_m(VL),  n_r = f_n(VL),  k_r = f_k(VL)
+
+This module defines those functions for the TPU microkernel family (see
+DESIGN.md §2 for the SVE→TPU mapping), a registry of microkernels, and the
+three code-generation *policies* the benchmarks compare:
+
+  - ``scalable``: tile sizes derived from the queried :class:`HardwareSpec`
+    (the paper's approach — SVE-analogue).
+  - ``fixed``: tile sizes are compile-time constants chosen for a reference
+    128-bit-era target (the NEON-analogue baseline).
+  - ``unpacked``: no packing at all; plain ``jnp.dot`` (the eager-analogue
+    baseline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core.hardware import HardwareSpec, query, sublane_packing
+
+__all__ = [
+    "LayoutPolicy",
+    "Microkernel",
+    "PackedLayout",
+    "MICROKERNELS",
+    "make_layout",
+    "ceil_div",
+    "round_up",
+]
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+class LayoutPolicy(str, enum.Enum):
+    SCALABLE = "scalable"   # paper: tiles = f(HardwareSpec)   (SVE analogue)
+    FIXED = "fixed"         # baseline: compile-time constants (NEON analogue)
+    UNPACKED = "unpacked"   # baseline: no data tiling         (eager analogue)
+
+
+@dataclasses.dataclass(frozen=True)
+class Microkernel:
+    """A microkernel family: tile-size functions of the hardware descriptor.
+
+    ``f_m/f_n/f_k`` receive ``(hw, dtype)`` and return the register-level
+    tile sizes.  The paper's representative SVE kernel is
+    ``(m_r, n_r, k_r) = (8, 2*VL, 1)``; the TPU outer-product family is
+    ``(sublanes*pack(dt)*s_m, lanes*s_n, mxu_k*s_k)``.
+    """
+
+    name: str
+    f_m: Callable[[HardwareSpec, jnp.dtype], int]
+    f_n: Callable[[HardwareSpec, jnp.dtype], int]
+    f_k: Callable[[HardwareSpec, jnp.dtype], int]
+
+    def tiles(self, hw: HardwareSpec, dtype) -> tuple[int, int, int]:
+        dtype = jnp.dtype(dtype)
+        return (self.f_m(hw, dtype), self.f_n(hw, dtype), self.f_k(hw, dtype))
+
+
+def _mxu_outer_product(s_m: int = 1, s_n: int = 1, s_k: int = 1) -> Microkernel:
+    """TPU MXU outer-product microkernel family.
+
+    - ``m_r = sublanes * pack(dt) * s_m``: one native second-minor tile per
+      unroll step (fp32: 8, bf16: 16, int8: 32) — dtype scaling, the analogue
+      of SVE's elements-per-register scaling.
+    - ``n_r = lanes * s_n``: the direct ``VL`` analogue (paper: ``n_r = 2VL``).
+    - ``k_r = mxu_k * s_k``: systolic contraction depth.
+
+    With ``s_n == s_k`` the output tile ``(m_r, n_r)`` coincides with the
+    LHS-input tile ``(m_r, k_r)`` of a consumer matmul, which is what makes
+    packed-layout propagation across chained matmuls *free* on TPU
+    (DESIGN.md §2).
+    """
+    return Microkernel(
+        name=f"mxu_outer_product_{s_m}x{s_n}x{s_k}",
+        f_m=lambda hw, dt: hw.sublanes * sublane_packing(dt) * s_m,
+        f_n=lambda hw, dt: hw.lanes * s_n,
+        f_k=lambda hw, dt: hw.mxu_k * s_k,
+    )
+
+
+def _fixed_reference() -> Microkernel:
+    """NEON-analogue: constants tuned once for a 128-lane-era target and then
+    frozen, regardless of what hardware the code actually runs on."""
+    return Microkernel(
+        name="fixed_8x128x128",
+        f_m=lambda hw, dt: 8,
+        f_n=lambda hw, dt: 128,
+        f_k=lambda hw, dt: 128,
+    )
+
+
+MICROKERNELS: dict[str, Microkernel] = {
+    "mxu_outer_product": _mxu_outer_product(),
+    "mxu_outer_product_2x": _mxu_outer_product(s_m=2),
+    "fixed_8x128x128": _fixed_reference(),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLayout:
+    """A concrete (instantiated) packed layout for one matmul.
+
+    Produced by :func:`make_layout` from (policy, hardware, dtype).  All
+    shape arithmetic for pack/unpack/mmt4d flows through this object so that
+    tile sizes appear in exactly one place — the compiler-pipeline discipline
+    the paper argues for.
+    """
+
+    policy: LayoutPolicy
+    kernel_name: str
+    m_r: int
+    n_r: int
+    k_r: int
+    dtype: str
+
+    # ---- shape arithmetic (padding semantics, paper §4.3) ----
+    def outer(self, dim: int, tile: int) -> int:
+        return ceil_div(dim, tile)
+
+    def packed_lhs_shape(self, m: int, k: int) -> tuple[int, int, int, int]:
+        return (self.outer(m, self.m_r), self.outer(k, self.k_r), self.m_r, self.k_r)
+
+    def packed_rhs_shape(self, k: int, n: int) -> tuple[int, int, int, int]:
+        # RHS is packed transposed (mmt4d convention): [N_o, K_o, n_r, k_r].
+        return (self.outer(n, self.n_r), self.outer(k, self.k_r), self.n_r, self.k_r)
+
+    def packed_out_shape(self, m: int, n: int) -> tuple[int, int, int, int]:
+        return (self.outer(m, self.m_r), self.outer(n, self.n_r), self.m_r, self.n_r)
+
+    @property
+    def chain_compatible(self) -> bool:
+        """True iff an mmt4d *output* tile is a valid LHS *input* tile, i.e.
+        packed-layout propagation across chained matmuls is a no-op."""
+        return self.n_r == self.k_r
+
+    def flops(self, m: int, n: int, k: int) -> int:
+        """FLOPs actually executed on packed (padded) operands."""
+        mp = self.outer(m, self.m_r) * self.m_r
+        np_ = self.outer(n, self.n_r) * self.n_r
+        kp = self.outer(k, self.k_r) * self.k_r
+        return 2 * mp * np_ * kp
+
+
+def make_layout(
+    policy: LayoutPolicy | str = LayoutPolicy.SCALABLE,
+    hw: HardwareSpec | None = None,
+    dtype=jnp.float32,
+    kernel: str = "mxu_outer_product",
+) -> PackedLayout:
+    """Instantiate a packed layout.
+
+    Under the SCALABLE policy, tile sizes are queried from the hardware
+    descriptor at instantiation time — the ``svcntw()`` moment.  Under FIXED,
+    the frozen reference constants are used no matter the hardware.
+    """
+    policy = LayoutPolicy(policy)
+    dtype = jnp.dtype(dtype)
+    if policy is LayoutPolicy.UNPACKED:
+        return PackedLayout(policy=policy, kernel_name="xla_dot", m_r=1, n_r=1, k_r=1,
+                            dtype=dtype.name)
+    if policy is LayoutPolicy.FIXED:
+        mk = MICROKERNELS["fixed_8x128x128"]
+        hw = hw or query()
+        m_r, n_r, k_r = mk.tiles(hw, dtype)
+        return PackedLayout(policy=policy, kernel_name=mk.name, m_r=m_r, n_r=n_r,
+                            k_r=k_r, dtype=dtype.name)
+    hw = hw or query()
+    mk = MICROKERNELS[kernel]
+    m_r, n_r, k_r = mk.tiles(hw, dtype)
+    return PackedLayout(policy=policy, kernel_name=mk.name, m_r=m_r, n_r=n_r, k_r=k_r,
+                        dtype=dtype.name)

@@ -1,0 +1,224 @@
+"""Packed linear layers — the framework's single matmul entry point.
+
+Every weight matmul in every model goes through :func:`linear_apply` (or
+:func:`batched_linear_apply` for expert-stacked weights), dispatching on the
+:class:`MatmulContext` policy:
+
+  - ``scalable`` / ``fixed``: pack -> mmt4d -> unpack with the corresponding
+    layout (paper pipeline).  When handed/asked-for a :class:`PackedArray`,
+    pack/unpack at the boundary are elided (layout propagation).
+  - ``unpacked``: plain XLA dot (baseline).
+
+Weights are stored *unpacked* in the parameter pytree (optimizer- and
+checkpoint-friendly); ``pack_rhs`` of a step-constant weight is CSE'd /
+fused by XLA within a step, and the serving path can materialize packed
+weights once via :func:`prepack_params` (paper: packing "treated as a
+standalone operation on the full operands").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hardware import HardwareSpec, query
+from repro.core.layout import LayoutPolicy, PackedLayout, make_layout
+from repro.core.mmt4d import Epilogue, mmt4d, matmul as policy_matmul
+from repro.core import packing
+from repro.core.propagation import PackedArray, pack_activation
+
+__all__ = [
+    "MatmulContext",
+    "linear_init",
+    "linear_apply",
+    "batched_linear_apply",
+    "prepack_params",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulContext:
+    """Layout policy + hardware descriptor threaded through model code.
+
+    ``mesh_axes``: when set (distributed lowering), model code emits
+    explicit tensor-parallel sharding constraints (Megatron-style col/row)
+    inside scanned layer bodies — GSPMD propagation alone loses the TP
+    factorization through scan body parameters (measured 8x compute waste
+    on the 256-chip mesh; §Perf iteration 4).
+    """
+
+    policy: LayoutPolicy = LayoutPolicy.SCALABLE
+    hw: Optional[HardwareSpec] = None
+    propagate: bool = True   # carry PackedArray across pointwise ops when possible
+    kernel: str = "mxu_outer_product"
+    mesh_axes: Optional[tuple] = None
+    dp_size: int = 1
+    tp_size: int = 1
+    moe_local: bool = False  # per-DP-shard MoE dispatch (RunConfig knob)
+
+    def layout(self, dtype) -> PackedLayout:
+        return make_layout(self.policy, self.hw or query(), dtype, kernel=self.kernel)
+
+    @property
+    def packed(self) -> bool:
+        return self.policy is not LayoutPolicy.UNPACKED
+
+    @property
+    def tp_axis(self) -> Optional[str]:
+        if self.mesh_axes and "model" in self.mesh_axes:
+            return "model"
+        return None
+
+    @property
+    def dp_axes(self) -> tuple:
+        return tuple(a for a in ("pod", "data") if self.mesh_axes
+                     and a in self.mesh_axes)
+
+    def constrain(self, x, spec_tail: tuple):
+        """with_sharding_constraint over the TRAILING dims of ``x`` (leading
+        dims unconstrained).  No-op outside distributed lowering."""
+        if self.tp_axis is None or x is None:
+            return x
+        from jax.sharding import PartitionSpec as P
+        nd = x.ndim
+        lead = (None,) * (nd - len(spec_tail))
+        return jax.lax.with_sharding_constraint(x, P(*lead, *spec_tail))
+
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32, scale: Optional[float] = None) -> dict:
+    scale = (d_in ** -0.5) if scale is None else scale
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def _maybe_packed_weight(params: dict, layout: PackedLayout):
+    """Return (b_pack, n) using a pre-packed weight if present.
+
+    ``w_n`` stores the true (unpadded) output dim as the SHAPE of an empty
+    array — shapes stay static under jit, values become tracers."""
+    if "w_pack" in params:
+        wp = params["w_pack"]
+        return wp, params["w_n"].shape[0]
+    w = params["w"]
+    return packing.pack_rhs(w, layout), w.shape[-1]
+
+
+def linear_apply(params: dict, x: Union[jnp.ndarray, PackedArray], ctx: MatmulContext,
+                 *, activation: Optional[Callable] = None,
+                 keep_packed: bool = False,
+                 tp: Optional[str] = None) -> Union[jnp.ndarray, PackedArray]:
+    """y = act(x @ W + b), policy-dispatched, propagation-aware.
+
+    x: [..., M, K] array or PackedArray of the same logical shape.
+    ``tp``: Megatron-style tensor parallelism of this matmul — "col" (out
+    dim sharded over the model axis) or "row" (contraction dim sharded;
+    output partial-summed).  Only consulted under distributed lowering
+    (``ctx.mesh_axes``); anchors GSPMD inside scanned bodies.
+    Returns [..., M, N] (or a PackedArray thereof when ``keep_packed``).
+    """
+    epi = Epilogue(activation=activation, has_bias="b" in params)
+    bias = params.get("b")
+    mdl = ctx.tp_axis
+    if not ctx.packed:
+        assert not isinstance(x, PackedArray)
+        w = params["w"]
+        if mdl and tp == "col":
+            w = ctx.constrain(w, (None, mdl))
+        elif mdl and tp == "row":
+            w = ctx.constrain(w, (mdl, None))
+            x = ctx.constrain(x, (None, mdl))
+        out = policy_matmul(x, w, ctx.layout(x.dtype), epilogue=epi, bias=bias)
+        if mdl and tp == "col":
+            out = ctx.constrain(out, (None, mdl))
+        return out
+
+    if isinstance(x, PackedArray):
+        layout = x.layout
+        a_pack, m = x.data, x.m
+    else:
+        layout = ctx.layout(x.dtype)
+        a_pack, m = packing.pack_lhs(x, layout), x.shape[-2]
+
+    b_pack, n = _maybe_packed_weight(params, layout)
+    if mdl and tp == "col":
+        # B_pack [N_o, K_o, n_r, k_r]: shard output tiles over model
+        b_pack = ctx.constrain(b_pack, (mdl, None, None, None))
+    elif mdl and tp == "row":
+        # contraction tiles over model; LHS K_o must match
+        b_pack = ctx.constrain(b_pack, (None, mdl, None, None))
+        a_pack = ctx.constrain(a_pack, (None, mdl, None, None))
+    c_pack = mmt4d(a_pack, b_pack)
+    if mdl and tp == "col":
+        c_pack = ctx.constrain(c_pack, (None, mdl, None, None))
+    c_pack = epi.apply_packed(c_pack, layout, bias)
+
+    if keep_packed and ctx.propagate:
+        if not layout.chain_compatible:
+            # Fixed-tile fallback: output tile shape != input tile shape, so
+            # the result must be round-tripped through the unpacked domain
+            # before the next matmul (this is precisely the repacking cost
+            # the scalable layout avoids -- visible in the benchmarks).
+            c = packing.unpack_out(c_pack, m, n)
+            return pack_activation(c, layout)
+        return PackedArray(data=c_pack, m=m, k=n, layout=layout)
+    return packing.unpack_out(c_pack, m, n)
+
+
+def batched_linear_apply(params: dict, x: jnp.ndarray, ctx: MatmulContext,
+                         *, activation: Optional[Callable] = None) -> jnp.ndarray:
+    """Expert-stacked linear: x [E, C, K] @ w [E, K, N] -> [E, C, N].
+
+    The packed formulation maps the paper's 2-D layouts over the leading
+    expert dim (tiles stay 2-D; the expert dim shards over the model axis).
+    """
+    w = params["w"]
+    epi = Epilogue(activation=activation, has_bias="b" in params)
+    bias = params.get("b")
+    mdl = ctx.tp_axis
+    if mdl:  # expert parallelism: anchor the expert dim to the model axis
+        from jax.sharding import PartitionSpec as P
+        w = jax.lax.with_sharding_constraint(w, P(mdl, None, None))
+        x = jax.lax.with_sharding_constraint(x, P(mdl, None, None))
+    if not ctx.packed:
+        c = jnp.einsum("eck,ekn->ecn", x, w,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        return epi.apply_unpacked(c, bias)
+    layout = ctx.layout(x.dtype)
+    a_pack = packing.pack_lhs(x, layout)       # [E, C_o, K_o, m_r, k_r]
+    b_pack = packing.pack_rhs(w, layout)       # [E, N_o, K_o, n_r, k_r]
+    c_pack = mmt4d(a_pack, b_pack)             # [E, C_o, N_o, m_r, n_r]
+    c_pack = epi.apply_packed(c_pack, layout, bias)
+    out = packing.unpack_out(c_pack, x.shape[-2], w.shape[-1])
+    if mdl:
+        from jax.sharding import PartitionSpec as P
+        out = jax.lax.with_sharding_constraint(out, P(mdl, None, None))
+    return out
+
+
+def prepack_params(params, ctx: MatmulContext, dtype=None):
+    """Serving-path weight packing: replace every linear's ``w`` with
+    ``w_pack`` materialized once (amortized packing, paper §4.1)."""
+    if not ctx.packed:
+        return params
+
+    def rec(p):
+        if isinstance(p, dict):
+            if "w" in p and isinstance(p["w"], jnp.ndarray) and p["w"].ndim == 2:
+                w = p["w"] if dtype is None else p["w"].astype(dtype)
+                layout = ctx.layout(w.dtype)
+                out = {k: rec(v) for k, v in p.items() if k != "w"}
+                out["w_pack"] = packing.pack_rhs(w, layout)
+                # static metadata: encode the unpadded out-dim as a shape
+                out["w_n"] = jnp.zeros((w.shape[-1], 0), jnp.int8)
+                return out
+            return {k: rec(v) for k, v in p.items()}
+        return p
+
+    return rec(params)

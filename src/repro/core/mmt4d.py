@@ -1,0 +1,128 @@
+"""Packed matrix multiplication (`linalg.mmt4d` analogue) + fused epilogues.
+
+Computes, on packed operands,
+
+    C_pack[m_o, n_o, :, :] += sum_k A_pack[m_o, k_o, :, :] @ B_pack[n_o, k_o, :, :]^T
+
+This is the jnp formulation used throughout the framework (XLA lowers it to
+MXU-shaped dot_generals on TPU and it is what the distributed dry-run
+compiles).  The Pallas TPU kernel with explicit BlockSpec VMEM tiling lives
+in ``repro.kernels.mmt4d`` and is validated against this formulation.
+
+``Epilogue`` models the paper's fusion story: bias add / activation /
+residual executed *in the packed domain* on the mmt4d result, so that no
+unpack is needed between a matmul and its pointwise consumers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import LayoutPolicy, PackedLayout
+from repro.core import packing
+
+__all__ = ["mmt4d", "Epilogue", "packed_matmul", "matmul"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Pointwise epilogue fused into the packed-domain matmul output.
+
+    ``bias`` is an unpacked ``[N]`` vector; it is packed (tiled along n_r)
+    and broadcast over the packed output — layout propagation of the
+    producer's layout into the consumer (paper §4.3).
+    """
+
+    activation: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+    has_bias: bool = False
+
+    def apply_packed(self, cp: jnp.ndarray, layout: PackedLayout,
+                     bias: Optional[jnp.ndarray]) -> jnp.ndarray:
+        if self.has_bias:
+            assert bias is not None
+            n_o, n_r = cp.shape[-3], cp.shape[-1]
+            bp = packing.pad_to_tiles(bias[None, :], 1, layout.n_r)
+            bp = bp.reshape(n_o, n_r)  # [N_o, n_r]
+            cp = cp + bp[..., :, None, :]  # broadcast over m_o (via leading) & m_r
+        if self.activation is not None:
+            cp = self.activation(cp)
+        return cp
+
+    def apply_unpacked(self, c: jnp.ndarray, bias: Optional[jnp.ndarray]) -> jnp.ndarray:
+        if self.has_bias:
+            assert bias is not None
+            c = c + bias
+        if self.activation is not None:
+            c = self.activation(c)
+        return c
+
+
+def mmt4d(a_pack: jnp.ndarray, b_pack: jnp.ndarray, *,
+          accum_dtype=jnp.float32) -> jnp.ndarray:
+    """Packed matmul on packed operands.
+
+    a_pack: [..., M_o, K_o, m_r, k_r]
+    b_pack: [..., N_o, K_o, n_r, k_r]
+    returns C_pack [..., M_o, N_o, m_r, n_r] in ``a_pack.dtype``'s promoted
+    compute dtype (accumulation in ``accum_dtype``).
+    """
+    # Unbatched RHS (a plain weight) with leading LHS batch dims: fold the
+    # lead dims into M_o -- a free (contiguous) reshape in the packed layout.
+    if b_pack.ndim == 4 and a_pack.ndim > 4:
+        lead = a_pack.shape[:-4]
+        m_o = a_pack.shape[-4]
+        a2 = a_pack.reshape((-1,) + a_pack.shape[-3:])
+        out = mmt4d(a2, b_pack, accum_dtype=accum_dtype)
+        return out.reshape(lead + (m_o,) + out.shape[1:])
+
+    # Contract over (K_o, k_r); batch over leading dims.
+    nbatch = a_pack.ndim - 4
+    assert b_pack.ndim - 4 == nbatch, (a_pack.shape, b_pack.shape)
+    # dot_general dims: lhs [..., M_o, K_o, m_r, k_r], rhs [..., N_o, K_o, n_r, k_r]
+    lhs_contract = (nbatch + 1, nbatch + 3)
+    rhs_contract = (nbatch + 1, nbatch + 3)
+    batch_dims = tuple(range(nbatch))
+    out = jax.lax.dot_general(
+        a_pack, b_pack,
+        dimension_numbers=((lhs_contract, rhs_contract), (batch_dims, batch_dims)),
+        preferred_element_type=accum_dtype,
+    )
+    # out: [..., M_o, m_r, N_o, n_r] -> [..., M_o, N_o, m_r, n_r]
+    perm = list(range(nbatch)) + [nbatch, nbatch + 2, nbatch + 1, nbatch + 3]
+    out = out.transpose(perm)
+    return out.astype(a_pack.dtype)
+
+
+def packed_matmul(a: jnp.ndarray, b: jnp.ndarray, layout: PackedLayout, *,
+                  epilogue: Epilogue = Epilogue(), bias: Optional[jnp.ndarray] = None,
+                  a_is_packed: bool = False, keep_packed: bool = False) -> jnp.ndarray:
+    """pack -> mmt4d -> (epilogue in packed domain) -> unpack.
+
+    The pack/unpack boundary ops are exactly the paper's decomposition; with
+    ``a_is_packed`` / ``keep_packed`` callers elide them when the neighbour
+    op already speaks the packed layout (propagation).
+    """
+    m = None if a_is_packed else a.shape[-2]
+    n = b.shape[-1]
+    a_pack = a if a_is_packed else packing.pack_lhs(a, layout)
+    b_pack = packing.pack_rhs(b, layout)
+    c_pack = mmt4d(a_pack, b_pack)
+    c_pack = epilogue.apply_packed(c_pack, layout, bias)
+    if keep_packed:
+        return c_pack
+    if m is None:
+        m = a_pack.shape[-4] * a_pack.shape[-2]
+    return packing.unpack_out(c_pack, m, n)
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, layout: PackedLayout, *,
+           epilogue: Epilogue = Epilogue(), bias: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Policy-dispatched matmul: the single entry point used by model code."""
+    if layout.policy is LayoutPolicy.UNPACKED:
+        c = jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+        return epilogue.apply_unpacked(c, bias)
+    return packed_matmul(a, b, layout, epilogue=epilogue, bias=bias)

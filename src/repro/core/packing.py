@@ -1,0 +1,92 @@
+"""Pack / unpack transformations (paper §4.1, `linalg.pack`/`unpack` analogue).
+
+Packing is an *explicit data transformation*, not a logical view: the packed
+tensor is materialized with tiles contiguous in memory (on TPU this makes
+every tile a native (sublane, lane) hardware tile).  Padding semantics are
+built in: out-of-bounds elements of partial tiles are stored as explicit
+zeros so the compute kernel runs unmasked (paper §4.3).
+
+These are the pure-jnp formulations that (a) serve as the oracle for the
+Pallas kernels in ``repro.kernels.{pack,unpack}`` and (b) are what the
+distributed dry-run lowers through XLA (pack lowers to pad+reshape+transpose,
+which XLA fuses into neighbouring ops — the IREE fusion analogue).
+
+Leading batch dims are supported: ``pack_lhs`` on ``[..., M, K]`` packs the
+trailing two dims, mapping the paper's 2-D formulation over expert/batch
+stacks (used by the MoE batched matmuls).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.layout import PackedLayout
+
+__all__ = [
+    "pad_to_tiles",
+    "pack_lhs",
+    "pack_rhs",
+    "pack_out",
+    "unpack_out",
+    "unpack_lhs",
+]
+
+
+def pad_to_tiles(x: jnp.ndarray, t0: int, t1: int) -> jnp.ndarray:
+    """Zero-pad the trailing two dims of ``x`` up to multiples of (t0, t1)."""
+    d0, d1 = x.shape[-2], x.shape[-1]
+    p0 = (-d0) % t0
+    p1 = (-d1) % t1
+    if p0 == 0 and p1 == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 2) + [(0, p0), (0, p1)]
+    return jnp.pad(x, pad)
+
+
+def _pack2d(x: jnp.ndarray, t0: int, t1: int) -> jnp.ndarray:
+    """[..., D0, D1] -> [..., D0/t0, D1/t1, t0, t1] (materialized tiles)."""
+    x = pad_to_tiles(x, t0, t1)
+    *lead, d0, d1 = x.shape
+    x = x.reshape(*lead, d0 // t0, t0, d1 // t1, t1)
+    # [..., o0, t0, o1, t1] -> [..., o0, o1, t0, t1]
+    perm = list(range(len(lead))) + [len(lead), len(lead) + 2, len(lead) + 1, len(lead) + 3]
+    return x.transpose(perm)
+
+
+def _unpack2d(xp: jnp.ndarray, d0: int, d1: int) -> jnp.ndarray:
+    """Inverse of :func:`_pack2d`; slices away the tile padding."""
+    *lead, o0, o1, t0, t1 = xp.shape
+    perm = list(range(len(lead))) + [len(lead), len(lead) + 2, len(lead) + 1, len(lead) + 3]
+    x = xp.transpose(perm).reshape(*lead, o0 * t0, o1 * t1)
+    return x[..., :d0, :d1]
+
+
+def pack_lhs(a: jnp.ndarray, layout: PackedLayout) -> jnp.ndarray:
+    """A[..., M, K] -> A_pack[..., M_o, K_o, m_r, k_r]."""
+    return _pack2d(a, layout.m_r, layout.k_r)
+
+
+def pack_rhs(b: jnp.ndarray, layout: PackedLayout) -> jnp.ndarray:
+    """B[..., K, N] -> B_pack[..., N_o, K_o, n_r, k_r] (transposed packing).
+
+    mmt4d convention: the RHS is packed along N-major so that the microkernel
+    reads contiguous ``n_r x k_r`` blocks (paper Listing 2 reads B as
+    contiguous vectors of length VL).
+    """
+    bt = jnp.swapaxes(b, -1, -2)  # [..., N, K]
+    return _pack2d(bt, layout.n_r, layout.k_r)
+
+
+def pack_out(c: jnp.ndarray, layout: PackedLayout) -> jnp.ndarray:
+    """C[..., M, N] -> C_pack[..., M_o, N_o, m_r, n_r]."""
+    return _pack2d(c, layout.m_r, layout.n_r)
+
+
+def unpack_out(cp: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    """C_pack[..., M_o, N_o, m_r, n_r] -> C[..., M, N]."""
+    return _unpack2d(cp, m, n)
+
+
+def unpack_lhs(ap: jnp.ndarray, m: int, k: int) -> jnp.ndarray:
+    """A_pack[..., M_o, K_o, m_r, k_r] -> A[..., M, K]."""
+    return _unpack2d(ap, m, k)

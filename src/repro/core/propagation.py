@@ -1,0 +1,153 @@
+"""Packed-layout propagation (paper §4.3 "Fusion and layout propagation").
+
+The paper materializes packing as an explicit op so the compiler can hoist /
+fuse it across producers and consumers.  In this framework the same role is
+played by :class:`PackedArray`: a pytree carrier for an activation tensor
+living in packed layout.  Pointwise ops, bias adds, residual adds and
+normalizations are implemented *directly on the packed representation*, so a
+chain  ``linear -> norm -> act -> linear``  executes entirely in the packed
+domain — the intermediate ``unpack∘pack`` pairs cancel exactly (on TPU they
+are exactly inverse transposes; see DESIGN.md §2 chain-compatibility).
+
+Padding correctness: packed tiles are zero-padded (paper's padding
+semantics).  Reductions over the feature dim therefore sum zeros — harmless —
+but must divide by the *true* feature size, which :class:`PackedArray`
+tracks (``k``).  Ops that are not padding-neutral (softmax, top-k) must
+unpack first; ``PackedArray`` deliberately does not implement them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import PackedLayout
+from repro.core import packing
+
+__all__ = ["PackedArray", "pack_activation"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedArray:
+    """An activation tensor in packed layout.
+
+    ``data``: [..., M_o, K_o, m_r, k_r] — trailing two logical dims were
+    (M = tokens/rows, K = features).  ``m``/``k`` are the true (unpadded)
+    logical sizes; ``layout`` is static metadata.
+    """
+
+    data: jnp.ndarray
+    m: int
+    k: int
+    layout: PackedLayout
+
+    # -- pytree plumbing (layout/sizes are static aux data) --
+    def tree_flatten(self):
+        return (self.data,), (self.m, self.k, self.layout)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        m, k, layout = aux
+        return cls(data=children[0], m=m, k=k, layout=layout)
+
+    # -- basic properties --
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def lead_shape(self):
+        return self.data.shape[:-4]
+
+    def astype(self, dtype) -> "PackedArray":
+        return self._with(self.data.astype(dtype))
+
+    def _with(self, data) -> "PackedArray":
+        return PackedArray(data=data, m=self.m, k=self.k, layout=self.layout)
+
+    # -- pointwise ops in the packed domain --
+    def elementwise(self, fn: Callable[[jnp.ndarray], jnp.ndarray]) -> "PackedArray":
+        return self._with(fn(self.data))
+
+    def __add__(self, other: "PackedArray") -> "PackedArray":
+        assert isinstance(other, PackedArray) and other.layout == self.layout
+        return self._with(self.data + other.data)
+
+    def __mul__(self, other) -> "PackedArray":
+        if isinstance(other, PackedArray):
+            return self._with(self.data * other.data)
+        return self._with(self.data * other)
+
+    def _feature_vec(self, v: jnp.ndarray) -> jnp.ndarray:
+        """Tile an unpacked [K] vector to broadcast against packed data:
+        [K] -> [K_o, 1, k_r] (broadcasts over M_o via leading, m_r via 1)."""
+        k_o, k_r = self.data.shape[-3], self.data.shape[-1]
+        vp = packing.pad_to_tiles(v[None, :], 1, self.layout.k_r).reshape(k_o, k_r)
+        return vp[:, None, :]
+
+    def scale_features(self, v: jnp.ndarray) -> "PackedArray":
+        """x * v with v an unpacked per-feature vector (e.g. norm gain)."""
+        return self._with(self.data * self._feature_vec(v))
+
+    def add_features(self, v: jnp.ndarray) -> "PackedArray":
+        """x + v (e.g. bias) — note: also writes into feature padding, which
+        is then ignored by construction downstream (consumer matmuls contract
+        against RHS rows that are zero in the padded region)."""
+        return self._with(self.data + self._feature_vec(v))
+
+    # -- reductions over the (padded) feature dim, padding-corrected --
+    def _sum_features(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.sum(x, axis=(-3, -1), keepdims=True)  # over (K_o, k_r)
+
+    def rms_norm(self, gain: jnp.ndarray | None, eps: float = 1e-6,
+                 upcast: bool = True) -> "PackedArray":
+        x = self.data.astype(jnp.float32) if upcast else self.data
+        ms = self._sum_features(x * x) / self.k  # true feature count
+        y = x * jax.lax.rsqrt(ms + eps)
+        out = self._with(y.astype(self.dtype))
+        if gain is not None:
+            out = out.scale_features(gain.astype(self.dtype))
+        return out
+
+    def layer_norm(self, gain: jnp.ndarray | None, bias: jnp.ndarray | None,
+                   eps: float = 1e-5, upcast: bool = True) -> "PackedArray":
+        """LayerNorm in the packed domain.
+
+        Mean subtraction would poison the feature padding (pad slots would
+        become ``-mean``), so the centered value is re-masked with the
+        feature-padding mask before variance/output — keeping the padding
+        explicitly zero, as the layout contract requires.
+        """
+        x = self.data.astype(jnp.float32) if upcast else self.data
+        mask = self._feature_mask()
+        mean = self._sum_features(x) / self.k
+        xc = (x - mean) * mask
+        var = self._sum_features(xc * xc) / self.k
+        y = xc * jax.lax.rsqrt(var + eps)
+        out = self._with(y.astype(self.dtype))
+        if gain is not None:
+            out = out.scale_features(gain.astype(self.dtype))
+        if bias is not None:
+            out = out.add_features(bias.astype(self.dtype))
+            out = out._with(out.data * mask.astype(out.dtype))
+        return out
+
+    def _feature_mask(self) -> jnp.ndarray:
+        """[K_o, 1, k_r] mask of true (non-padding) feature slots."""
+        k_o, k_r = self.data.shape[-3], self.data.shape[-1]
+        idx = jnp.arange(k_o * k_r).reshape(k_o, k_r)
+        return (idx < self.k).astype(jnp.float32)[:, None, :]
+
+    # -- boundary ops --
+    def unpack(self) -> jnp.ndarray:
+        return packing.unpack_lhs(self.data, self.m, self.k)
+
+
+def pack_activation(x: jnp.ndarray, layout: PackedLayout) -> PackedArray:
+    """Pack an activation [..., M, K] into LHS layout (tokens x features)."""
+    return PackedArray(data=packing.pack_lhs(x, layout), m=x.shape[-2],
+                       k=x.shape[-1], layout=layout)

@@ -1,0 +1,1 @@
+from repro.kernels.mmt4d.ops import *  # noqa: F401,F403

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel for packed matmul (mmt4d) — paper Listing 2, TPU-native.
+
+The paper's representative SVE microkernel computes an ``8 x 2VL`` output
+tile per K step via outer products on packed operands.  The TPU-native
+equivalent feeds the MXU from packed tiles resident in VMEM:
+
+  grid (ceil(M_o/TM), ceil(N_o/TN), K_o), K innermost (sequential);
+  per step:   A block (TM,1,m_r,k_r) and B block (TN,1,n_r,k_r) stream
+              HBM->VMEM; one dot_general of (TM*m_r, k_r) x (TN*n_r, k_r)^T
+              accumulates into an fp32 VMEM scratch tile;
+  at k==K_o-1: the accumulator is retiled to packed-C layout, the fused
+              epilogue (bias + activation, packed-domain) is applied, and
+              the C block is written once.
+
+Because the operands are *packed*, every VMEM block is a stack of native
+(sublane, lane) hardware tiles and the in-kernel reshapes are contiguous
+no-ops — the memory-layout property the paper's scalable layouts exist to
+guarantee.  Tile sizes (m_r, n_r, k_r) arrive from the layout object, i.e.
+from the hardware descriptor — never hard-coded here.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mmt4d_kernel_call"]
+
+_ACTIVATIONS = {
+    None: lambda x: x,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+def _kernel(a_ref, b_ref, bias_ref, c_ref, acc_ref, *, k_steps: int,
+            activation: Optional[str], out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    tm, _, m_r, k_r = a_ref.shape
+    tn, _, n_r, _ = b_ref.shape
+    a = a_ref[...].reshape(tm * m_r, k_r)          # contiguous: packed tiles
+    b = b_ref[...].reshape(tn * n_r, k_r)
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        out = acc.reshape(tm, m_r, tn, n_r).transpose(0, 2, 1, 3)
+        if bias_ref is not None:
+            out = out + bias_ref[...][None, :, None, :].astype(jnp.float32)
+        out = _ACTIVATIONS[activation](out)
+        c_ref[...] = out.astype(out_dtype)
+
+
+def mmt4d_kernel_call(a_pack: jnp.ndarray, b_pack: jnp.ndarray,
+                      bias_pack: Optional[jnp.ndarray] = None, *,
+                      activation: Optional[str] = None,
+                      tm: int = 16, tn: int = 4,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Run the Pallas mmt4d kernel.
+
+    a_pack: [M_o, K_o, m_r, k_r]; b_pack: [N_o, K_o, n_r, k_r];
+    bias_pack: optional [N_o, n_r] (bias already in packed-N layout).
+    Returns C_pack [M_o, N_o, m_r, n_r] in ``a_pack.dtype``.
+    """
+    m_o, k_o, m_r, k_r = a_pack.shape
+    n_o, k_o2, n_r, k_r2 = b_pack.shape
+    assert (k_o, k_r) == (k_o2, k_r2), (a_pack.shape, b_pack.shape)
+    tm = min(tm, m_o)
+    tn = min(tn, n_o)
+    grid = (pl.cdiv(m_o, tm), pl.cdiv(n_o, tn), k_o)
+
+    in_specs = [
+        pl.BlockSpec((tm, 1, m_r, k_r), lambda i, j, k: (i, k, 0, 0)),
+        pl.BlockSpec((tn, 1, n_r, k_r), lambda i, j, k: (j, k, 0, 0)),
+    ]
+    inputs = [a_pack, b_pack]
+    if bias_pack is not None:
+        in_specs.append(pl.BlockSpec((tn, n_r), lambda i, j, k: (j, 0)))
+        inputs.append(bias_pack)
+    else:
+        in_specs.append(None)
+        inputs.append(None)
+
+    kernel = functools.partial(_kernel, k_steps=k_o, activation=activation,
+                               out_dtype=a_pack.dtype)
+
+    def body(a, b, bias):
+        args = (a, b) if bias is None else (a, b, bias)
+        specs = in_specs[:2] if bias is None else in_specs
+
+        def kern(*refs):
+            if bias is None:
+                a_ref, b_ref, c_ref, acc_ref = refs
+                kernel(a_ref, b_ref, None, c_ref, acc_ref)
+            else:
+                a_ref, b_ref, bias_ref, c_ref, acc_ref = refs
+                kernel(a_ref, b_ref, bias_ref, c_ref, acc_ref)
+
+        return pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=specs,
+            out_specs=pl.BlockSpec((tm, tn, m_r, n_r), lambda i, j, k: (i, j, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((m_o, n_o, m_r, n_r), a_pack.dtype),
+            scratch_shapes=[pltpu.VMEM((tm * m_r, tn * n_r), jnp.float32)],
+            interpret=interpret,
+        )(*args)
+
+    return body(a_pack, b_pack, bias_pack)

@@ -1,0 +1,68 @@
+"""Jitted wrapper for the mmt4d kernel: backend/interpret dispatch + VMEM-aware
+block-size selection."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hardware import HardwareSpec, query
+from repro.kernels.mmt4d.kernel import mmt4d_kernel_call
+from repro.kernels.mmt4d.ref import mmt4d_ref
+
+__all__ = ["mmt4d", "pick_blocks"]
+
+
+def pick_blocks(m_o: int, n_o: int, m_r: int, n_r: int, k_r: int, itemsize: int,
+                hw: Optional[HardwareSpec] = None) -> tuple[int, int]:
+    """Choose (TM, TN) so the working set (A blk + B blk + fp32 acc + C blk)
+    fits comfortably in VMEM (budget: 1/4 of VMEM to leave room for
+    double-buffered pipelining)."""
+    hw = hw or query()
+    budget = hw.vmem_bytes // 4
+    tm, tn = 16, 8
+    while tm > 1 or tn > 1:
+        a_b = tm * m_r * k_r * itemsize
+        b_b = tn * n_r * k_r * itemsize
+        acc = tm * m_r * tn * n_r * 4
+        c_b = tm * m_r * tn * n_r * itemsize
+        if a_b + b_b + acc + c_b <= budget:
+            break
+        if tn >= tm:
+            tn = max(1, tn // 2)
+        else:
+            tm = max(1, tm // 2)
+    return min(tm, m_o), min(tn, n_o)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "interpret", "tm", "tn"))
+def _jit_call(a_pack, b_pack, bias_pack, *, activation, interpret, tm, tn):
+    return mmt4d_kernel_call(a_pack, b_pack, bias_pack, activation=activation,
+                             tm=tm, tn=tn, interpret=interpret)
+
+
+def mmt4d(a_pack: jnp.ndarray, b_pack: jnp.ndarray,
+          bias_pack: Optional[jnp.ndarray] = None, *,
+          activation: Optional[str] = None,
+          interpret: Optional[bool] = None,
+          hw: Optional[HardwareSpec] = None) -> jnp.ndarray:
+    """Packed matmul on packed operands via the Pallas TPU kernel.
+
+    On non-TPU backends runs in interpret mode (kernel body executed in
+    Python) — TPU is the target, CPU validates semantics.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m_o, _, m_r, k_r = a_pack.shape
+    n_o, _, n_r, _ = b_pack.shape
+    tm, tn = pick_blocks(m_o, n_o, m_r, n_r, k_r, a_pack.dtype.itemsize, hw)
+    return _jit_call(a_pack, b_pack, bias_pack, activation=activation,
+                     interpret=interpret, tm=tm, tn=tn)
+
+
+def mmt4d_reference(a_pack, b_pack, bias_pack=None, *, activation=None):
+    """Re-export of the oracle for convenience."""
+    return mmt4d_ref(a_pack, b_pack, bias_pack, activation=activation)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the mmt4d Pallas kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_ACTIVATIONS = {
+    None: lambda x: x,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+def mmt4d_ref(a_pack: jnp.ndarray, b_pack: jnp.ndarray,
+              bias_pack: Optional[jnp.ndarray] = None, *,
+              activation: Optional[str] = None) -> jnp.ndarray:
+    """C_pack[m_o,n_o,:,:] = act(sum_k A_pack[m_o,k_o] @ B_pack[n_o,k_o]^T + bias)."""
+    out = jnp.einsum("mkab,nkcb->mnac", a_pack, b_pack,
+                     preferred_element_type=jnp.float32)
+    if bias_pack is not None:
+        out = out + bias_pack[None, :, None, :].astype(jnp.float32)
+    out = _ACTIVATIONS[activation](out)
+    return out.astype(a_pack.dtype)

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel for the pack layout transformation (paper §4.1/Fig. 1).
+
+Row-major A[M, K] -> A_pack[M_o, K_o, m_r, k_r] with explicit zero padding of
+partial tiles (padding semantics, §4.3).  Memory-bound by construction; the
+kernel's job is a streaming retile: each grid step reads a (TM*m_r, TK*k_r)
+row-major block, masks the out-of-range region, and writes it as a
+(TM, TK, m_r, k_r) stack of hardware tiles.
+
+The same kernel packs the RHS (transposed) layout: callers hand it ``B^T``
+and tile sizes (n_r, k_r).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pack_kernel_call"]
+
+
+def _kernel(a_ref, out_ref, *, m: int, k: int, t0: int, t1: int):
+    tm, tk, r0, r1 = out_ref.shape
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    blk = a_ref[...]  # (tm*r0, tk*r1) row-major block (OOB reads unspecified)
+    rows = i * (tm * r0) + jax.lax.broadcasted_iota(jnp.int32, blk.shape, 0)
+    cols = j * (tk * r1) + jax.lax.broadcasted_iota(jnp.int32, blk.shape, 1)
+    mask = (rows < m) & (cols < k)
+    blk = jnp.where(mask, blk, jnp.zeros_like(blk))  # explicit tile padding
+    out_ref[...] = blk.reshape(tm, r0, tk, r1).transpose(0, 2, 1, 3)
+
+
+def pack_kernel_call(a: jnp.ndarray, t0: int, t1: int, *, tm: int = 8,
+                     tk: int = 8, interpret: bool = False) -> jnp.ndarray:
+    """A[M, K] -> A_pack[ceil(M/t0), ceil(K/t1), t0, t1]."""
+    m, k = a.shape
+    m_o = pl.cdiv(m, t0)
+    k_o = pl.cdiv(k, t1)
+    tm = min(tm, m_o)
+    tk = min(tk, k_o)
+    grid = (pl.cdiv(m_o, tm), pl.cdiv(k_o, tk))
+    kernel = functools.partial(_kernel, m=m, k=k, t0=t0, t1=t1)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tm * t0, tk * t1), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tm, tk, t0, t1), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_o, k_o, t0, t1), a.dtype),
+        interpret=interpret,
+    )(a)

@@ -1,0 +1,30 @@
+"""Jitted wrapper for the pack kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pack.kernel import pack_kernel_call
+from repro.kernels.pack.ref import pack_ref
+
+__all__ = ["pack"]
+
+
+@functools.partial(jax.jit, static_argnames=("t0", "t1", "interpret"))
+def _jit_call(a, *, t0, t1, interpret):
+    return pack_kernel_call(a, t0, t1, interpret=interpret)
+
+
+def pack(a: jnp.ndarray, t0: int, t1: int, *,
+         interpret: Optional[bool] = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _jit_call(a, t0=t0, t1=t1, interpret=interpret)
+
+
+def pack_reference(a, t0, t1):
+    return pack_ref(a, t0, t1)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the pack kernel (same math as repro.core.packing)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_ref(a: jnp.ndarray, t0: int, t1: int) -> jnp.ndarray:
+    """A[M, K] -> A_pack[ceil(M/t0), ceil(K/t1), t0, t1], zero-padded tiles."""
+    m, k = a.shape
+    p0 = (-m) % t0
+    p1 = (-k) % t1
+    a = jnp.pad(a, ((0, p0), (0, p1)))
+    mo, ko = a.shape[0] // t0, a.shape[1] // t1
+    return a.reshape(mo, t0, ko, t1).transpose(0, 2, 1, 3)

@@ -1,0 +1,38 @@
+"""Pallas TPU kernel for the unpack layout transformation (inverse of pack).
+
+A_pack[M_o, K_o, t0, t1] -> A[M, K]: each grid step reads a (TM, TK, t0, t1)
+stack of tiles from VMEM, retiles it to a row-major (TM*t0, TK*t1) block and
+writes it out; out-of-range writes at the ragged edge are masked by the
+BlockSpec machinery (padding is *dropped*, per the paper's unpack semantics).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["unpack_kernel_call"]
+
+
+def _kernel(ap_ref, out_ref):
+    tm, tk, t0, t1 = ap_ref.shape
+    blk = ap_ref[...]
+    out_ref[...] = blk.transpose(0, 2, 1, 3).reshape(tm * t0, tk * t1)
+
+
+def unpack_kernel_call(a_pack: jnp.ndarray, m: int, k: int, *, tm: int = 8,
+                       tk: int = 8, interpret: bool = False) -> jnp.ndarray:
+    """A_pack[M_o, K_o, t0, t1] -> A[m, k] (tile padding sliced away)."""
+    m_o, k_o, t0, t1 = a_pack.shape
+    tm = min(tm, m_o)
+    tk = min(tk, k_o)
+    grid = (pl.cdiv(m_o, tm), pl.cdiv(k_o, tk))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tm, tk, t0, t1), lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec((tm * t0, tk * t1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), a_pack.dtype),
+        interpret=interpret,
+    )(a_pack)

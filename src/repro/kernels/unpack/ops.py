@@ -1,0 +1,30 @@
+"""Jitted wrapper for the unpack kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.unpack.kernel import unpack_kernel_call
+from repro.kernels.unpack.ref import unpack_ref
+
+__all__ = ["unpack"]
+
+
+@functools.partial(jax.jit, static_argnames=("m", "k", "interpret"))
+def _jit_call(a_pack, *, m, k, interpret):
+    return unpack_kernel_call(a_pack, m, k, interpret=interpret)
+
+
+def unpack(a_pack: jnp.ndarray, m: int, k: int, *,
+           interpret: Optional[bool] = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _jit_call(a_pack, m=m, k=k, interpret=interpret)
+
+
+def unpack_reference(a_pack, m, k):
+    return unpack_ref(a_pack, m, k)

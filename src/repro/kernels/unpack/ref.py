@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the unpack kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def unpack_ref(a_pack: jnp.ndarray, m: int, k: int) -> jnp.ndarray:
+    mo, ko, t0, t1 = a_pack.shape
+    a = a_pack.transpose(0, 2, 1, 3).reshape(mo * t0, ko * t1)
+    return a[:m, :k]

@@ -1,0 +1,60 @@
+"""Device meshes for the production topology.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches JAX device state — the dry-run launcher
+must set ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before*
+any JAX initialization.
+
+Production topology (TPU v5e-like): 16x16 = 256 chips per pod; the
+multi-pod mesh adds a leading "pod" axis (2 pods = 512 chips) used for pure
+data parallelism across pods (ICI within a pod, DCN across pods).
+
+``make_elastic_mesh`` derives a best-effort (data, model) mesh from whatever
+devices are currently alive — the restart path after a node failure
+(checkpoints are mesh-agnostic, so training resumes on the reduced mesh).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+
+__all__ = ["make_production_mesh", "make_elastic_mesh", "dp_axes", "MESHES"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_elastic_mesh(model_parallel: int = 0):
+    """Best-effort mesh over the currently-available devices.
+
+    ``model_parallel=0`` picks the largest power-of-two TP degree that
+    divides the device count and is <= 16 (one ICI dimension); the rest is
+    data parallelism.  Used by the trainer on (re)start so a shrunken
+    device set still yields a valid mesh.
+    """
+    n = len(jax.devices())
+    if model_parallel <= 0:
+        model_parallel = 1
+        while (model_parallel < 16 and n % (model_parallel * 2) == 0
+               and model_parallel * 2 <= n):
+            model_parallel *= 2
+    data = n // model_parallel
+    return jax.make_mesh((data, model_parallel), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a mesh (pod included when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+MESHES = {
+    "pod": lambda: make_production_mesh(multi_pod=False),
+    "multipod": lambda: make_production_mesh(multi_pod=True),
+}

@@ -1,0 +1,77 @@
+"""Training launcher.
+
+Single-process form of the per-host entrypoint a multi-controller launch
+would run (jax.distributed.initialize + the same code).  Derives an elastic
+mesh from live devices, shards state/batches by the rule engine, and runs
+the fault-tolerant trainer (auto-resume, atomic checkpoints, straggler
+watchdog).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch smollm2-135m \
+        --steps 200 --seq 256 --batch 8 --reduced --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import RunConfig, get_config, reduced_config
+from repro.configs.base import ShapeSpec
+from repro.data.pipeline import SyntheticLM
+from repro.models.model import build_model
+from repro.training.trainer import Trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm2-135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true",
+                    help="shrink the config for CPU-scale runs")
+    ap.add_argument("--policy", default="scalable",
+                    choices=["scalable", "fixed", "unpacked"])
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--adam-8bit", action="store_true")
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a crash at this step (restart drills)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    run = RunConfig(layout_policy=args.policy, microbatch=args.microbatch,
+                    param_dtype=args.dtype, compute_dtype=args.dtype,
+                    lr=args.lr, adam_8bit=args.adam_8bit,
+                    grad_compression=args.grad_compression,
+                    remat=False, warmup_steps=min(20, args.steps // 5 + 1))
+
+    model = build_model(cfg, run, shape)
+    data = SyntheticLM(cfg, shape, seed=args.seed,
+                       text_len=model.text_len)
+    trainer = Trainer(model, data, run, ckpt_dir=args.ckpt_dir,
+                      total_steps=args.steps, ckpt_every=args.ckpt_every)
+    state, history = trainer.fit(jax.random.PRNGKey(args.seed),
+                                 fail_at=args.fail_at)
+    if history:
+        print(f"[train] {cfg.name}: step {int(state.step)}  "
+              f"loss {history[0]:.3f} -> {history[-1]:.3f}  "
+              f"stragglers={trainer.straggler_events}")
+    else:
+        print(f"[train] {cfg.name}: already at step {int(state.step)}, "
+              f"nothing to do")
+    return state, history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Grouped-query attention with packed-layout projections.
+
+The QKV/O *weight* matmuls run through the packed-layout pipeline (the
+paper's scope); the score/context matmuls (`QKᵀ`, `PV`) are
+activation-by-activation contractions left to native XLA einsum — the same
+boundary the paper draws (DESIGN.md §4).
+
+Supports: GQA/MQA/MHA, qk-norm (qwen3), QKV bias (qwen2/chatglm), partial 2d
+RoPE (chatglm), bidirectional (whisper encoder), cross-attention (whisper
+decoder), KV-cache decode with a sequence-shardable cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.linear import MatmulContext, linear_init, linear_apply
+from repro.models.common import Stream, apply_rope, maybe_unpack, norm_apply, norm_init
+
+Array = jnp.ndarray
+
+__all__ = ["attn_init", "attn_apply", "init_kv_cache", "core_attention"]
+
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32, *, cross: bool = False) -> dict:
+    d, dh = cfg.d_model, cfg.d_head
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 6)
+    bias = cfg.attn_bias
+    p = {
+        "wq": linear_init(ks[0], d, hq * dh, bias=bias, dtype=dtype),
+        "wk": linear_init(ks[1], d, hkv * dh, bias=bias, dtype=dtype),
+        "wv": linear_init(ks[2], d, hkv * dh, bias=bias, dtype=dtype),
+        "wo": linear_init(ks[3], hq * dh, d, dtype=dtype,
+                          scale=(hq * dh) ** -0.5 / max(1, cfg.n_layers) ** 0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init("rmsnorm", dh, dtype)
+        p["k_norm"] = norm_init("rmsnorm", dh, dtype)
+    del cross
+    return p
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    shp = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def core_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                   q_pos: Array, kv_len_mask: Optional[Array] = None) -> Array:
+    """q: [B,Sq,Hq,dh]; k,v: [B,Skv,Hkv,dh].  fp32 softmax; GQA grouping.
+
+    ``q_pos``: [Sq] (shared across batch — train/prefill) or [B,Sq] (decode)
+    absolute query positions for the causal mask against kv positions
+    0..Skv-1.  Keeping the shared-position case 2-D matters: a
+    batch-independent additive mask stays [Sq,Skv] and is fused/hoisted
+    cheaply, instead of materializing a [B,h,g,Sq,Skv] predicate in the
+    layer-scan carry (§Perf iteration 1).
+    ``kv_len_mask``: [B,Skv] optional validity mask (decode: cache slots
+    beyond the current position are invalid).
+    """
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scale = dh ** -0.5
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    kv_pos = jnp.arange(skv)
+    neg = jnp.float32(-1e30)
+    if causal:
+        if q_pos.ndim == 1:  # additive 2-D mask, batch-independent
+            bias = jnp.where(q_pos[:, None] >= kv_pos[None, :], 0.0, neg)
+            scores = scores + bias[None, None, None, :, :]
+        else:
+            m = q_pos[:, None, None, :, None] >= kv_pos[None, None, None, None, :]
+            scores = jnp.where(m, scores, neg)
+    if kv_len_mask is not None:
+        scores = jnp.where(kv_len_mask[:, None, None, None, :], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, dh).astype(q.dtype)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                      q_pos: Array, chunk: int = 512) -> Array:
+    """Memory-linear attention: scan over query chunks (scores are
+    [B,h,g,chunk,Skv] instead of [B,h,g,Sq,Skv]), each chunk rematerialized
+    on the backward pass.  O(chunk*Skv) live score memory — what makes the
+    32k prefill and 4k train cells fit HBM (§Perf iteration 2).  Numerics
+    identical to :func:`core_attention` (same fp32 softmax)."""
+    b, sq, hq, dh = q.shape
+    if sq <= chunk or sq % chunk != 0 or q_pos.ndim != 1:
+        return core_attention(q, k, v, causal=causal, q_pos=q_pos)
+    n = sq // chunk
+    qs = q.reshape(b, n, chunk, hq, dh).transpose(1, 0, 2, 3, 4)
+    ps = q_pos.reshape(n, chunk)
+
+    @jax.checkpoint
+    def one(args):
+        q_c, p_c = args
+        return core_attention(q_c, k, v, causal=causal, q_pos=p_c)
+
+    out = jax.lax.map(one, (qs, ps))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, hq, dh)
+
+
+def attn_apply(params: dict, x: Stream, ctx: MatmulContext, cfg: ModelConfig, *,
+               positions: Array, causal: bool = True,
+               kv_cache: Optional[dict] = None, cache_pos: Optional[Array] = None,
+               kv_source: Optional[Array] = None,
+               keep_packed: bool = False):
+    """Returns (out_stream, new_kv_cache).
+
+    Modes:
+      - train/prefill: ``kv_cache=None`` — full-sequence attention.
+      - decode: ``kv_cache`` given, ``cache_pos`` scalar — writes the new
+        K/V at ``cache_pos`` then attends over the cache.
+      - cross-attention: ``kv_source`` [B,S_enc,D] — K/V from the encoder
+        output (positions/causality ignored; no cache mutation here, whisper
+        cross K/V are precomputed per request by the serving engine).
+    """
+    dh = cfg.d_head
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+
+    q = maybe_unpack(linear_apply(params["wq"], x, ctx, tp="col"))
+    kv_in = x if kv_source is None else kv_source
+    kv_tp = "col" if cfg.n_kv_heads >= ctx.tp_size else None
+    k = maybe_unpack(linear_apply(params["wk"], kv_in, ctx, tp=kv_tp))
+    v = maybe_unpack(linear_apply(params["wv"], kv_in, ctx, tp=kv_tp))
+
+    b, sq = q.shape[0], q.shape[1]
+    skv = k.shape[1]
+    mdl = ctx.tp_axis
+    q = ctx.constrain(q.reshape(b, sq, hq, dh), (None, mdl, None))
+    k = k.reshape(b, skv, hkv, dh)
+    v = v.reshape(b, skv, hkv, dh)
+    if kv_tp == "col":
+        k = ctx.constrain(k, (None, mdl, None))
+        v = ctx.constrain(v, (None, mdl, None))
+
+    if cfg.qk_norm:
+        q = norm_apply(params["q_norm"], q, "rmsnorm")
+        k = norm_apply(params["k_norm"], k, "rmsnorm")
+
+    if cfg.rope != "none" and kv_source is None:
+        pct = cfg.rope_pct if cfg.rope == "partial2d" else 1.0
+        q, k = apply_rope(q, k, positions, theta=cfg.rope_theta, pct=pct)
+
+    new_cache = kv_cache
+    kv_len_mask = None
+    if kv_cache is not None:
+        # decode: insert this step's K/V at cache_pos, attend over the cache
+        kc = jax.lax.dynamic_update_slice(kv_cache["k"], k.astype(kv_cache["k"].dtype),
+                                          (0, cache_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(kv_cache["v"], v.astype(kv_cache["v"].dtype),
+                                          (0, cache_pos, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        k, v = kc, vc
+        kv_len_mask = (jnp.arange(k.shape[1]) < cache_pos + sq)[None, :]
+        kv_len_mask = jnp.broadcast_to(kv_len_mask, (b, k.shape[1]))
+
+    # positions stay 1-D when shared across the batch (train/prefill):
+    # the causal mask then stays 2-D instead of [B,h,g,Sq,Skv] (§Perf it. 1)
+    if kv_cache is None and kv_source is None and sq > 512:
+        out = chunked_attention(q, k, v, causal=causal, q_pos=positions)
+    else:
+        out = core_attention(q, k, v, causal=causal and kv_source is None,
+                             q_pos=positions, kv_len_mask=kv_len_mask)
+    out = ctx.constrain(out, (None, mdl, None)).reshape(b, sq, hq * dh)
+    out = linear_apply(params["wo"], out, ctx, keep_packed=keep_packed, tp="row")
+    return out, new_cache

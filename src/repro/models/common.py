@@ -1,0 +1,146 @@
+"""Shared model components: norms, rotary embeddings, embeddings, activations.
+
+All components speak both representations: plain arrays and
+:class:`~repro.core.propagation.PackedArray` (packed-layout propagation).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.propagation import PackedArray, pack_activation
+from repro.core.linear import MatmulContext
+
+Array = jnp.ndarray
+Stream = Union[jnp.ndarray, PackedArray]
+
+ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+        "tanh": jnp.tanh}
+
+__all__ = ["ACTS", "Stream", "norm_init", "norm_apply", "apply_rope",
+           "embed_init", "embed_apply", "maybe_pack", "maybe_unpack",
+           "stream_add"]
+
+
+# ---------------------------------------------------------------------------
+# packed/unpacked stream helpers
+# ---------------------------------------------------------------------------
+
+def maybe_pack(x: Array, ctx: MatmulContext) -> Stream:
+    if ctx.packed and ctx.propagate:
+        return pack_activation(x, ctx.layout(x.dtype))
+    return x
+
+
+def maybe_unpack(x: Stream) -> Array:
+    return x.unpack() if isinstance(x, PackedArray) else x
+
+
+def stream_add(a: Stream, b: Stream) -> Stream:
+    if isinstance(a, PackedArray) and isinstance(b, PackedArray):
+        return a + b
+    return maybe_unpack(a) + maybe_unpack(b)
+
+
+def constrain_stream(x: Stream, ctx: MatmulContext) -> Stream:
+    """Anchor the residual stream's leading batch dim to the DP axes inside
+    scanned layer bodies (GSPMD loses it through scan params otherwise)."""
+    if not ctx.dp_axes:
+        return x
+    import jax.lax
+    from jax.sharding import PartitionSpec as P
+    data = x.data if isinstance(x, PackedArray) else x
+    if data.shape[0] % max(1, ctx.dp_size) != 0:
+        return x  # e.g. batch-1 long-context: leave to seq sharding
+    spec = P(ctx.dp_axes, *(None,) * (data.ndim - 1))
+    out = jax.lax.with_sharding_constraint(data, spec)
+    if isinstance(x, PackedArray):
+        return PackedArray(data=out, m=x.m, k=x.k, layout=x.layout)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(kind: str, d: int, dtype=jnp.float32) -> dict:
+    if kind == "rmsnorm":
+        return {"g": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    if kind == "layernorm_np":  # olmo: non-parametric LN
+        return {}
+    raise ValueError(kind)
+
+
+def norm_apply(params: dict, x: Stream, kind: str, eps: float = 1e-6) -> Stream:
+    if isinstance(x, PackedArray):
+        if kind == "rmsnorm":
+            return x.rms_norm(params["g"], eps)
+        if kind == "layernorm":
+            return x.layer_norm(params["g"], params["b"], eps)
+        if kind == "layernorm_np":
+            return x.layer_norm(None, None, eps)
+        raise ValueError(kind)
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(xf * xf, -1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps)
+        return (y * params["g"].astype(jnp.float32)).astype(x.dtype)
+    if kind in ("layernorm", "layernorm_np"):
+        mean = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mean), -1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            y = y * params["g"].astype(jnp.float32) + params["b"].astype(jnp.float32)
+        return y.astype(x.dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (neox-style halves; partial rotation for 2d RoPE)
+# ---------------------------------------------------------------------------
+
+def apply_rope(q: Array, k: Array, positions: Array, *, theta: float = 1e4,
+               pct: float = 1.0) -> tuple[Array, Array]:
+    """q: [B,S,Hq,dh], k: [B,S,Hkv,dh], positions: [B,S] or [S] int32.
+
+    ``pct < 1`` rotates only the first ``pct * dh`` dims (chatglm 2d-RoPE
+    convention: half the head dim carries rotary phase, the rest is passthrough).
+    """
+    dh = q.shape[-1]
+    rot = int(dh * pct)
+    rot -= rot % 2
+    if positions.ndim == 1:
+        positions = positions[None, :]
+
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [B,S,half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+
+    def rotate(x):
+        xr, xp = x[..., :rot], x[..., rot:]
+        x1, x2 = xr[..., :half], xr[..., half:]
+        y1 = x1 * cos - x2 * sin
+        y2 = x2 * cos + x1 * sin
+        return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype), xp], -1)
+
+    return rotate(q), rotate(k)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    e = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return {"e": e.astype(dtype)}
+
+
+def embed_apply(params: dict, tokens: Array) -> Array:
+    return jnp.take(params["e"], tokens, axis=0)

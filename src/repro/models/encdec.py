@@ -1,0 +1,133 @@
+"""Encoder-decoder LM (whisper-small family).
+
+The conv/audio frontend is a stub per the assignment: ``input_specs`` hands
+the model precomputed frame embeddings [B, S_enc, d]; a linear projector +
+learned positions stand in for the conv stem.  Encoder layers are
+bidirectional; decoder layers are causal with cross-attention.  Decode
+precomputes the cross K/V once per request (standard whisper serving).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.linear import MatmulContext, linear_init, linear_apply
+from repro.models import attention
+from repro.models.common import (constrain_stream, embed_apply, embed_init,
+                                 maybe_pack, maybe_unpack, norm_apply,
+                                 norm_init)
+from repro.models import transformer as tfm
+
+Array = jnp.ndarray
+
+__all__ = ["encdec_init", "encode", "decode_train", "compute_cross_kv",
+           "encdec_forward", "encdec_decode_step", "enc_config"]
+
+
+def enc_config(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, name=cfg.name + "-enc",
+                               n_layers=cfg.encoder_layers, moe=False,
+                               encoder_layers=0)
+
+
+def encdec_init(key, cfg: ModelConfig, run: RunConfig, *, max_src: int,
+                max_tgt: int) -> dict:
+    dtype = jnp.dtype(run.param_dtype)
+    ks = jax.random.split(key, 6)
+    ecfg = enc_config(cfg)
+    return {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "pe_enc": (jax.random.normal(ks[1], (max_src, cfg.d_model), jnp.float32)
+                   * 0.01).astype(dtype),
+        "pe_dec": (jax.random.normal(ks[2], (max_tgt, cfg.d_model), jnp.float32)
+                   * 0.01).astype(dtype),
+        "frontend_proj": linear_init(ks[3], cfg.d_model, cfg.d_model, bias=True,
+                                     dtype=dtype),
+        "enc_groups": tfm.layers_init(ks[4], ecfg, dtype),
+        "enc_ln_f": norm_init(cfg.norm, cfg.d_model, dtype),
+        "dec_groups": tfm.layers_init(ks[5], cfg, dtype, cross=True),
+        "ln_f": norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+
+
+def encode(params: dict, frames: Array, ctx: MatmulContext, cfg: ModelConfig,
+           run: RunConfig) -> Array:
+    s = frames.shape[1]
+    x = linear_apply(params["frontend_proj"], frames, ctx)
+    x = x + params["pe_enc"][:s].astype(x.dtype)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = maybe_pack(x, ctx)
+    x, _, _ = tfm.layers_apply(params["enc_groups"], x, ctx, enc_config(cfg), run,
+                               positions=positions, causal=False)
+    x = norm_apply(params["enc_ln_f"], x, cfg.norm)
+    return maybe_unpack(x)
+
+
+def decode_train(params: dict, tokens: Array, enc_out: Array, ctx: MatmulContext,
+                 cfg: ModelConfig, run: RunConfig) -> Array:
+    s = tokens.shape[1]
+    x = embed_apply(params["embed"], tokens)
+    x = constrain_stream(x, ctx)  # anchor the token gather (see model._embeds)
+    x = x + params["pe_dec"][:s].astype(x.dtype)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = maybe_pack(x, ctx)
+    x, _, _ = tfm.layers_apply(params["dec_groups"], x, ctx, cfg, run,
+                               positions=positions, causal=True, enc_out=enc_out)
+    x = norm_apply(params["ln_f"], x, cfg.norm)
+    return tfm.logits_apply(params, x, ctx, cfg)
+
+
+def encdec_forward(params: dict, batch: dict, ctx: MatmulContext,
+                   cfg: ModelConfig, run: RunConfig) -> Array:
+    enc_out = encode(params, batch["frames"], ctx, cfg, run)
+    return decode_train(params, batch["tokens"], enc_out, ctx, cfg, run)
+
+
+def compute_cross_kv(params: dict, enc_out: Array, ctx: MatmulContext,
+                     cfg: ModelConfig) -> dict:
+    """Precompute decoder cross-attention K/V from the encoder output.
+
+    Returns a [G, ...]-stacked pytree matching ``dec_groups`` structure.
+    """
+    b, s = enc_out.shape[0], enc_out.shape[1]
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+
+    def per_group(gp):
+        out = {}
+        for name, bp in gp.items():
+            cp = bp["cross"]
+            k = maybe_unpack(linear_apply(cp["wk"], enc_out, ctx)).reshape(b, s, hkv, dh)
+            v = maybe_unpack(linear_apply(cp["wv"], enc_out, ctx)).reshape(b, s, hkv, dh)
+            if cfg.qk_norm:
+                k = norm_apply(cp["k_norm"], k, "rmsnorm")
+            out[name] = {"k": k, "v": v}
+        return out
+
+    def body(_, gp):
+        return 0, per_group(gp)
+
+    _, stacked = jax.lax.scan(body, 0, params["dec_groups"])
+    return stacked
+
+
+def encdec_decode_step(params: dict, caches: dict, token: Array, pos: Array,
+                       ctx: MatmulContext, cfg: ModelConfig, run: RunConfig
+                       ) -> Tuple[Array, dict]:
+    """One decoder token step; caches = {"layers": [G,...], "cross": [G,...]}."""
+    b, s = token.shape
+    x = embed_apply(params["embed"], token)
+    x = constrain_stream(x, ctx)
+    x = x + jax.lax.dynamic_slice_in_dim(params["pe_dec"], pos, s, 0).astype(x.dtype)
+    positions = pos + jnp.arange(s, dtype=jnp.int32)  # 1-D: shared batch
+    x = maybe_pack(x, ctx)
+    x, new_layers, _ = tfm.layers_apply(
+        params["dec_groups"], x, ctx, cfg, run, positions=positions, causal=True,
+        caches=caches["layers"], cache_pos=pos, cross_kv=caches["cross"])
+    x = norm_apply(params["ln_f"], x, cfg.norm)
+    logits = tfm.logits_apply(params, x, ctx, cfg)
+    return logits, {"layers": new_layers, "cross": caches["cross"]}

@@ -1,0 +1,134 @@
+"""Mamba (selective SSM) mixer — jamba's recurrent block.
+
+The in/out/x/dt projections run through the packed-layout pipeline; the
+selective-scan recurrence itself is not a matmul and stays a native
+associative scan (noted as layout-inapplicable in DESIGN.md
+§Arch-applicability).
+
+Train path: parallel associative scan over the sequence.
+Decode path: O(1) recurrent state update (conv window + SSM state).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.linear import MatmulContext, linear_init, linear_apply
+from repro.models.common import Stream, maybe_unpack
+
+Array = jnp.ndarray
+
+__all__ = ["mamba_init", "mamba_apply", "init_mamba_cache"]
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    dt_rank = -(-d // 16)
+    return d, di, dt_rank, cfg.mamba_d_state
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, di, dt_rank, n = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    dt = jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32) *
+                 (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": linear_init(ks[0], d, 2 * di, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.mamba_d_conv, 1, di), jnp.float32)
+                   * (cfg.mamba_d_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": linear_init(ks[2], di, dt_rank + 2 * n, dtype=dtype),
+        "dt_proj": {"w": (jax.random.normal(ks[3], (dt_rank, di), jnp.float32)
+                          * dt_rank ** -0.5).astype(dtype),
+                    "b": dt_bias.astype(jnp.float32)},
+        "a_log": jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                          (di, n))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": linear_init(ks[5], di, d, dtype=dtype,
+                                scale=di ** -0.5 / max(1, cfg.n_layers) ** 0.5),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    _, di, _, n = _dims(cfg)
+    return {"conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, n), jnp.float32)}
+
+
+def _causal_conv(x: Array, w: Array, b: Array, prepend: Optional[Array] = None) -> Array:
+    """Depthwise causal conv1d.  x: [B,S,di]; w: [W,1,di]."""
+    wdt = x.dtype
+    pad = w.shape[0] - 1
+    if prepend is None:
+        x_in = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    else:
+        x_in = jnp.concatenate([prepend.astype(wdt), x], axis=1)
+    out = jax.lax.conv_general_dilated(
+        x_in, w.astype(wdt), window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b.astype(wdt)
+
+
+def _ssm_scan(da: Array, dbx: Array) -> Array:
+    """h_t = da_t * h_{t-1} + dbx_t via associative scan over axis 1."""
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a2 * a1, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+    return h
+
+
+def mamba_apply(params: dict, x: Stream, ctx: MatmulContext, cfg: ModelConfig, *,
+                cache: Optional[dict] = None) -> Tuple[Array, Optional[dict]]:
+    """x: stream [B,S,D].  Returns ([B,S,D], new_cache)."""
+    d, di, dt_rank, n = _dims(cfg)
+    xz = maybe_unpack(linear_apply(params["in_proj"], x, ctx, tp="col"))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    b, s = x_in.shape[0], x_in.shape[1]
+
+    new_cache = None
+    if cache is None:
+        x_c = _causal_conv(x_in, params["conv_w"], params["conv_b"])
+    else:
+        window = jnp.concatenate([cache["conv"].astype(x_in.dtype), x_in], axis=1)
+        x_c = _causal_conv(x_in, params["conv_w"], params["conv_b"],
+                           prepend=cache["conv"])
+        new_conv = window[:, -(cfg.mamba_d_conv - 1):, :]
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype)}
+    x_c = jax.nn.silu(x_c)
+
+    proj = linear_apply(params["x_proj"], x_c, ctx)
+    dt, b_ssm, c_ssm = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(
+        (dt.astype(jnp.float32) @ params["dt_proj"]["w"].astype(jnp.float32))
+        + params["dt_proj"]["b"])                                  # [B,S,di]
+    a = -jnp.exp(params["a_log"])                                  # [di,N]
+
+    da = jnp.exp(delta[..., None] * a)                             # [B,S,di,N]
+    dbx = (delta[..., None] * b_ssm[:, :, None, :].astype(jnp.float32)
+           * x_c[..., None].astype(jnp.float32))
+
+    if cache is None:
+        h = _ssm_scan(da, dbx)                                     # [B,S,di,N]
+    else:
+        h0 = cache["ssm"]                                          # [B,di,N]
+        if s == 1:
+            h = (da[:, 0] * h0 + dbx[:, 0])[:, None]
+        else:  # prefill with state: inject h0 into the first step
+            dbx = dbx.at[:, 0].add(da[:, 0] * h0)
+            h = _ssm_scan(da, dbx)
+        new_cache = {**(new_cache or {}), "ssm": h[:, -1]}
+
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_ssm.astype(jnp.float32))
+    y = y + params["d_skip"] * x_c.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(xz.dtype)
+    out = linear_apply(params["out_proj"], y, ctx, tp="row")
+    return out, new_cache

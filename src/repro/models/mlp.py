@@ -1,0 +1,47 @@
+"""Gated / plain MLP blocks in the packed domain.
+
+The MLP is the paper's sweet spot: two (or three) chained weight matmuls
+with a pointwise activation between them.  Under the scalable layout the
+entire block runs packed — pack once at entry, unpack once at exit (and even
+those cancel against neighbouring packed ops under propagation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.linear import MatmulContext, linear_init, linear_apply
+from repro.core.propagation import PackedArray
+from repro.models.common import ACTS, Stream
+
+__all__ = ["mlp_init", "mlp_apply"]
+
+
+def mlp_init(key, d: int, d_ff: int, cfg: ModelConfig, dtype=jnp.float32,
+             *, bias: bool = False) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"wu": linear_init(ks[0], d, d_ff, bias=bias, dtype=dtype),
+         "wd": linear_init(ks[1], d_ff, d, bias=bias, dtype=dtype,
+                           scale=d_ff ** -0.5 / max(1, cfg.n_layers) ** 0.5)}
+    if cfg.glu:
+        p["wg"] = linear_init(ks[2], d, d_ff, bias=bias, dtype=dtype)
+    return p
+
+
+def mlp_apply(params: dict, x: Stream, ctx: MatmulContext, cfg: ModelConfig,
+              *, keep_packed: bool = False) -> Stream:
+    act = ACTS[cfg.act]
+    inner_packed = ctx.packed and ctx.propagate
+    if cfg.glu:
+        g = linear_apply(params["wg"], x, ctx, activation=act,
+                         keep_packed=inner_packed, tp="col")
+        u = linear_apply(params["wu"], x, ctx, keep_packed=inner_packed,
+                         tp="col")
+        h = g * u
+    else:
+        h = linear_apply(params["wu"], x, ctx, activation=act,
+                         keep_packed=inner_packed, tp="col")
+    return linear_apply(params["wd"], h, ctx, keep_packed=keep_packed,
+                        tp="row")

@@ -1,0 +1,208 @@
+"""Model facade: init / forward / loss / decode_step / input_specs per family.
+
+This is the single interface consumed by the trainer, the serving engine,
+the dry-run launcher and the benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeSpec
+from repro.core.hardware import HardwareSpec, query
+from repro.core.linear import MatmulContext, linear_apply
+from repro.core.layout import LayoutPolicy
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tfm
+from repro.models.common import embed_apply
+
+Array = jnp.ndarray
+
+__all__ = ["ReproModel", "build_model"]
+
+
+def _xent(logits: Array, labels: Array, z_loss: float) -> Tuple[Array, dict]:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(lse - ll)
+    zl = jnp.mean(lse ** 2)
+    return nll + z_loss * zl, {"nll": nll, "z_loss": zl}
+
+
+class ReproModel:
+    """Family-dispatched model with a uniform train/serve interface."""
+
+    def __init__(self, cfg: ModelConfig, run: RunConfig, shape: ShapeSpec,
+                 hw: Optional[HardwareSpec] = None, mesh=None):
+        self.cfg = cfg
+        self.run = run
+        self.shape = shape
+        mesh_axes = None
+        dp_size = tp_size = 1
+        if mesh is not None:
+            mesh_axes = tuple(mesh.axis_names)
+            tp_size = mesh.shape.get("model", 1)
+            dp_size = 1
+            for a in ("pod", "data"):
+                dp_size *= mesh.shape.get(a, 1)
+        self.ctx = MatmulContext(policy=LayoutPolicy(run.layout_policy),
+                                 hw=hw or query(), propagate=run.propagate,
+                                 mesh_axes=mesh_axes, dp_size=dp_size,
+                                 tp_size=tp_size,
+                                 moe_local=run.moe_local_dispatch)
+        self.compute_dtype = jnp.dtype(run.compute_dtype)
+
+    # ------------------------------------------------------------------
+    # shapes
+    # ------------------------------------------------------------------
+    @property
+    def text_len(self) -> int:
+        s = self.shape.seq_len
+        if self.cfg.family == "vlm":
+            return s - self.cfg.vision_tokens
+        return s
+
+    @property
+    def enc_len(self) -> int:
+        return self.shape.seq_len // self.cfg.audio_downsample
+
+    def input_specs(self, kind: Optional[str] = None) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        kind = kind or self.shape.kind
+        b, s = self.shape.global_batch, self.shape.seq_len
+        i32 = jnp.int32
+        f = self.compute_dtype
+        d = self.cfg.d_model
+        sds = jax.ShapeDtypeStruct
+        if kind in ("train", "prefill"):
+            specs = {"tokens": sds((b, self.text_len), i32)}
+            if kind == "train":
+                specs["labels"] = sds((b, self.text_len), i32)
+            if self.cfg.family == "encdec":
+                specs["frames"] = sds((b, self.enc_len, d), f)
+            if self.cfg.family == "vlm":
+                specs["patches"] = sds((b, self.cfg.vision_tokens, d), f)
+            return specs
+        # decode: one new token against a seq_len cache
+        caches = jax.eval_shape(lambda: self.init_cache(b, s))
+        return {"caches": caches,
+                "token": sds((b, 1), i32),
+                "pos": sds((), i32)}
+
+    # ------------------------------------------------------------------
+    # params
+    # ------------------------------------------------------------------
+    def init(self, key) -> dict:
+        if self.cfg.family == "encdec":
+            return encdec_mod.encdec_init(key, self.cfg, self.run,
+                                          max_src=max(self.enc_len, 8),
+                                          max_tgt=max(self.shape.seq_len, 8))
+        return tfm.lm_init(key, self.cfg, self.run)
+
+    # ------------------------------------------------------------------
+    # forward / loss
+    # ------------------------------------------------------------------
+    def _embeds(self, params: dict, batch: dict) -> Array:
+        from repro.models.common import constrain_stream
+        x = embed_apply(params["embed"], batch["tokens"]).astype(self.compute_dtype)
+        # anchor the gather output (batch over DP, features replicated):
+        # without this GSPMD can demand a model-sharded feature dim from the
+        # token gather and trip its own partitioner (verifier failure)
+        x = constrain_stream(x, self.ctx)
+        if self.cfg.family == "vlm":
+            vis = linear_apply(params["vision_proj"],
+                               batch["patches"].astype(self.compute_dtype), self.ctx)
+            x = jnp.concatenate([vis, x], axis=1)
+        return x
+
+    def forward(self, params: dict, batch: dict,
+                last_only: bool = False) -> Tuple[Array, dict]:
+        """Full-sequence forward.  Returns (logits, aux).
+
+        ``last_only``: serving prefill — emit logits for the final position
+        only (skips the [B,S,vocab] projection; §Perf iteration 3).
+        """
+        if self.cfg.family == "encdec":
+            logits = encdec_mod.encdec_forward(params, batch, self.ctx, self.cfg,
+                                               self.run)
+            if last_only:
+                logits = logits[:, -1:]
+            return logits, dict(tfm.AUX_ZERO)
+        x = self._embeds(params, batch)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        logits, _, aux = tfm.lm_apply(params, x, self.ctx, self.cfg, self.run,
+                                      positions=positions, last_only=last_only)
+        return logits, aux
+
+    def loss(self, params: dict, batch: dict) -> Tuple[Array, dict]:
+        logits, aux = self.forward(params, batch)
+        if self.cfg.family == "vlm":
+            logits = logits[:, self.cfg.vision_tokens:]
+        loss, metrics = _xent(logits, batch["labels"], self.run.z_loss)
+        if self.cfg.moe:
+            loss = (loss
+                    + self.cfg.router_aux_weight * aux["load_balance"]
+                    + self.cfg.router_z_weight * aux["router_z"])
+            metrics.update(aux)
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        dt = self.compute_dtype
+        if self.cfg.family == "encdec":
+            layers = tfm.init_layer_caches(self.cfg, batch, max_len, dt)
+            hkv, dh = self.cfg.n_kv_heads, self.cfg.d_head
+            period = tfm.pattern_period(self.cfg)
+            groups = self.cfg.n_layers // period
+            enc_l = max_len // self.cfg.audio_downsample
+            cross = {f"p{i}": {"k": jnp.zeros((groups, batch, enc_l, hkv, dh), dt),
+                               "v": jnp.zeros((groups, batch, enc_l, hkv, dh), dt)}
+                     for i in range(period)}
+            return {"layers": layers, "cross": cross}
+        return tfm.init_layer_caches(self.cfg, batch, max_len, dt)
+
+    def prefill_cache(self, params: dict, batch: dict) -> dict:
+        """Serving-side: build a cache for decode (whisper: run the encoder
+        and materialize cross K/V)."""
+        b = batch["tokens"].shape[0]
+        max_len = self.shape.seq_len
+        caches = self.init_cache(b, max_len)
+        if self.cfg.family == "encdec":
+            enc_out = encdec_mod.encode(params, batch["frames"], self.ctx,
+                                        self.cfg, self.run)
+            caches["cross"] = encdec_mod.compute_cross_kv(params, enc_out,
+                                                          self.ctx, self.cfg)
+        return caches
+
+    def decode_step(self, params: dict, caches: dict, token: Array, pos: Array,
+                    embeds: Optional[Array] = None) -> Tuple[Array, dict]:
+        """Token step(s) against the cache.  ``token``: [B, s] (s=1 decode;
+        s>1 = chunked prefill into the cache).  ``embeds`` overrides token
+        embeddings (vlm prefill with patch embeddings).  Returns
+        (logits [B,s,V], caches')."""
+        if self.cfg.family == "encdec":
+            return encdec_mod.encdec_decode_step(params, caches, token, pos,
+                                                 self.ctx, self.cfg, self.run)
+        if embeds is None:
+            x = embed_apply(params["embed"], token).astype(self.compute_dtype)
+        else:
+            x = embeds.astype(self.compute_dtype)
+        b, s = x.shape[0], x.shape[1]
+        positions = pos + jnp.arange(s, dtype=jnp.int32)  # 1-D: shared batch
+        logits, new_caches, _ = tfm.lm_apply(params, x, self.ctx, self.cfg,
+                                             self.run, positions=positions,
+                                             caches=caches, cache_pos=pos)
+        return logits, new_caches
+
+
+def build_model(cfg: ModelConfig, run: RunConfig, shape: ShapeSpec,
+                hw: Optional[HardwareSpec] = None, mesh=None) -> ReproModel:
+    return ReproModel(cfg, run, shape, hw, mesh=mesh)

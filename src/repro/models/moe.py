@@ -1,0 +1,171 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Design (scales to 128-expert configs; EP-shardable):
+  1. router (fp32) -> top-k -> normalized combine weights;
+  2. flat (token, choice) assignments sorted by expert (stable argsort),
+     position-in-expert via counts/offsets, capacity drop;
+  3. scatter into [E, C, D] (the EP all-to-all boundary: token dims shard
+     over data, the expert dim shards over model);
+  4. expert FFNs as *batched packed matmuls* — the paper's layouts mapped
+     over the leading expert dim;
+  5. weighted scatter-add combine back to tokens.
+
+Aux losses: Switch-style load-balance + router z-loss.
+
+Supports the assigned MoE variants: qwen3-moe (128e top-8), arctic (128e
+top-2 + parallel dense residual branch), jamba (16e top-2, every 2nd layer).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.linear import MatmulContext, linear_init, batched_linear_apply
+from repro.models.common import ACTS, Stream, maybe_unpack
+from repro.models import mlp as mlp_mod
+
+Array = jnp.ndarray
+
+__all__ = ["moe_init", "moe_apply", "capacity"]
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    c = -(-c // 8) * 8  # round up to sublane multiple (packing-friendly)
+    return max(8, min(c, n_tokens))
+
+
+def _expert_linear_init(key, e: int, d_in: int, d_out: int, dtype, scale=None):
+    scale = (d_in ** -0.5) if scale is None else scale
+    w = jax.random.normal(key, (e, d_in, d_out), jnp.float32) * scale
+    return {"w": w.astype(dtype)}
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": linear_init(ks[0], d, e, dtype=jnp.float32, scale=d ** -0.5),
+        "wu": _expert_linear_init(ks[1], e, d, f, dtype),
+        "wd": _expert_linear_init(ks[2], e, f, d, dtype,
+                                  scale=f ** -0.5 / max(1, cfg.n_layers) ** 0.5),
+    }
+    if cfg.glu:
+        p["wg"] = _expert_linear_init(ks[3], e, d, f, dtype)
+    if cfg.dense_residual:
+        p["dense"] = mlp_mod.mlp_init(ks[4], d, cfg.d_ff, cfg, dtype)
+    return p
+
+
+def constrain_blocks(xb: Array, ctx: MatmulContext) -> Array:
+    """Anchor the dispatch block dim to the DP axes (token-local sorting)."""
+    if not ctx.dp_axes:
+        return xb
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        xb, P(ctx.dp_axes, *(None,) * (xb.ndim - 1)))
+
+
+def moe_apply(params: dict, x: Stream, ctx: MatmulContext, cfg: ModelConfig,
+              *, local_dispatch: Optional[bool] = None) -> Tuple[Array, dict]:
+    """Returns (output [B,S,D] unpacked, aux-loss dict).
+
+    Routing is token-level top-k — not padding-neutral — so the stream is
+    unpacked at entry; the expert compute itself runs packed (step 4).
+    ``local_dispatch``: per-DP-shard sort/capacity (§Perf iteration 6).
+    """
+    if local_dispatch is None:
+        local_dispatch = ctx.moe_local
+    xu = maybe_unpack(x)
+    b, s, d = xu.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xf = xu.reshape(t, d)
+
+    # 1. routing (fp32)
+    logits = xf.astype(jnp.float32) @ params["router"]["w"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # [T, k]
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)          # renormalize
+
+    # 2. flat assignment, sort by expert, capacity.
+    # Local dispatch (§Perf iteration 6): sorting the GLOBAL [T*k]
+    # assignment under GSPMD forces an all-gather of every key/payload —
+    # the dominant collective in the MoE train cells.  With
+    # ``local_dispatch`` the sort runs per DP shard (blocks = dp_size,
+    # capacity per block), which is token-local; only the [E,C,D] expert
+    # buffers cross the mesh (the unavoidable EP all-to-all).
+    blocks = ctx.dp_size if (local_dispatch and ctx.dp_size > 1
+                             and t % ctx.dp_size == 0) else 1
+    tb = t // blocks
+    c = capacity(tb, cfg)
+
+    def dispatch(xf_b, top_e_b, top_p_b):
+        e_flat = top_e_b.reshape(tb * k)
+        w_flat = top_p_b.reshape(tb * k)
+        perm = jnp.argsort(e_flat, stable=True)                # token-priority
+        e_sorted = e_flat[perm]
+        w_sorted = w_flat[perm]
+        counts = jnp.bincount(e_flat, length=e)
+        offsets = jnp.cumsum(counts) - counts                  # exclusive
+        pos = jnp.arange(tb * k) - offsets[e_sorted]
+        keep = pos < c
+        src_tok = perm // k
+        dst_c = jnp.where(keep, pos, c - 1)
+        vals = xf_b[src_tok] * keep[:, None].astype(xf_b.dtype)
+        x_e = jnp.zeros((e, c, d), xf_b.dtype).at[e_sorted, dst_c].add(vals)
+        return x_e, (e_sorted, dst_c, w_sorted, keep, src_tok, counts)
+
+    if blocks == 1:
+        x_e, meta = dispatch(xf, top_e, top_p)
+    else:
+        xb = constrain_blocks(xf.reshape(blocks, tb, d), ctx)
+        x_eb, meta = jax.vmap(dispatch)(
+            xb, top_e.reshape(blocks, tb, k), top_p.reshape(blocks, tb, k))
+        # [blocks, E, C, D] -> [E, blocks*C, D]: the EP all-to-all boundary
+        x_e = x_eb.transpose(1, 0, 2, 3).reshape(e, blocks * c, d)
+
+    # 4. expert FFN (batched packed matmuls over the expert dim)
+    act = ACTS[cfg.act]
+    if cfg.glu:
+        g = batched_linear_apply(params["wg"], x_e, ctx, activation=act)
+        u = batched_linear_apply(params["wu"], x_e, ctx)
+        h = g * u
+    else:
+        h = batched_linear_apply(params["wu"], x_e, ctx, activation=act)
+    y_e = batched_linear_apply(params["wd"], h, ctx)           # [E, C(*blk), D]
+
+    # 5. combine
+    if blocks == 1:
+        e_sorted, dst_c, w_sorted, keep, src_tok, counts = meta
+        contrib = y_e[e_sorted, dst_c] * (w_sorted * keep).astype(y_e.dtype)[:, None]
+        y = jnp.zeros((t, d), xu.dtype).at[src_tok].add(contrib)
+    else:
+        y_eb = y_e.reshape(e, blocks, c, d).transpose(1, 0, 2, 3)
+
+        def combine(y_b, meta_b):
+            e_s, d_c, w_s, kp, s_t, _ = meta_b
+            contrib = y_b[e_s, d_c] * (w_s * kp).astype(y_b.dtype)[:, None]
+            return jnp.zeros((tb, d), xu.dtype).at[s_t].add(contrib)
+
+        y = jax.vmap(combine)(y_eb, meta).reshape(t, d)
+        counts = jnp.sum(meta[5], axis=0)
+        keep = meta[3].reshape(-1)
+    y = y.reshape(b, s, d)
+
+    if cfg.dense_residual:  # arctic: parallel dense branch
+        y = y + maybe_unpack(mlp_mod.mlp_apply(params["dense"], x, ctx, cfg))
+
+    # aux losses (fp32 scalars)
+    me = jnp.mean(probs, axis=0)                               # mean router prob
+    ce = counts.astype(jnp.float32) / (t * k)                  # dispatch fraction
+    aux = {
+        "load_balance": e * jnp.sum(me * ce),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, -1) ** 2),
+        "dropped_frac": 1.0 - jnp.sum(keep.astype(jnp.float32)) / (t * k),
+    }
+    return y, aux

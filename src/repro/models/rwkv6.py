@@ -1,0 +1,172 @@
+"""RWKV-6 ("Finch") mixer: attention-free recurrence with data-dependent decay.
+
+Time-mix: per-head matrix-valued state ``S ∈ R^{dh x dh}`` updated as
+    S_t = diag(w_t) S_t-1 + k_t v_t^T,    y_t = (S_t-1 + diag(u) k_t v_t^T)^T r_t
+with the *data-dependent* per-channel decay ``w_t = exp(-exp(w0 + lora(x)))``
+— the Finch hallmark.  Token-shift mixing uses static per-channel lerp
+coefficients (the RWKV-5-style simplification; the data-dependent part kept
+is the decay, which is what makes RWKV-6 RWKV-6 — noted in DESIGN.md).
+
+All projections are packed-layout matmuls; the recurrence itself is a
+chunked ``lax.scan`` (checkpointed per chunk to bound activation memory) —
+O(1) state per decoded token, which is why this arch runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.linear import MatmulContext, linear_init, linear_apply
+from repro.models.common import Stream, maybe_unpack
+
+Array = jnp.ndarray
+
+__all__ = ["rwkv_tm_init", "rwkv_tm_apply", "rwkv_cm_init", "rwkv_cm_apply",
+           "init_rwkv_cache"]
+
+_DECAY_LORA = 64
+_CHUNK = 128
+
+
+def _heads(cfg: ModelConfig) -> tuple[int, int]:
+    dh = cfg.rwkv_head_dim
+    return cfg.d_model // dh, dh
+
+
+def rwkv_tm_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h, dh = _heads(cfg)
+    ks = jax.random.split(key, 8)
+    lin = lambda k_, o, sc=None: linear_init(k_, d, o, dtype=dtype, scale=sc)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),  # r,k,v,g,w shift-mix coeffs
+        "wr": lin(ks[0], d), "wk": lin(ks[1], d), "wv": lin(ks[2], d),
+        "wg": lin(ks[3], d),
+        "wo": lin(ks[4], d, d ** -0.5 / max(1, cfg.n_layers) ** 0.5),
+        "w0": -6.0 + jnp.zeros((d,), jnp.float32),
+        "w_a": (jax.random.normal(ks[5], (d, _DECAY_LORA), jnp.float32) * 0.01),
+        "w_b": (jax.random.normal(ks[6], (_DECAY_LORA, d), jnp.float32) * 0.01),
+        "u": jnp.zeros((h, dh), jnp.float32),
+        "ln_g": jnp.ones((d,), jnp.float32),  # per-head group-norm gain
+    }
+
+
+def rwkv_cm_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d), jnp.float32),  # r,k
+        "wr": linear_init(ks[0], d, d, dtype=dtype),
+        "wk": linear_init(ks[1], d, f, dtype=dtype),
+        "wv": linear_init(ks[2], f, d, dtype=dtype,
+                          scale=f ** -0.5 / max(1, cfg.n_layers) ** 0.5),
+    }
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    h, dh = _heads(cfg)
+    return {"tm_shift": jnp.zeros((batch, d), dtype),
+            "cm_shift": jnp.zeros((batch, d), dtype),
+            "state": jnp.zeros((batch, h, dh, dh), jnp.float32)}
+
+
+def _token_shift(x: Array, prev: Optional[Array]) -> Array:
+    """x_{t-1} along the sequence; first step uses ``prev`` (decode state)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """Chunked recurrence.  r,k,v,w: [B,S,H,dh] (fp32); s0: [B,H,dh,dh].
+
+    Returns (y [B,S,H,dh], s_final).
+    """
+    b, s, h, dh = r.shape
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp            # [B,H,dh]
+        a_t = k_t[..., :, None] * v_t[..., None, :]          # [B,H,dh,dh]
+        y_t = jnp.einsum("bhij,bhi->bhj", state + u[..., None] * a_t, r_t)
+        state = w_t[..., None] * state + a_t
+        return state, y_t
+
+    def chunk_body(state, xs):
+        return jax.checkpoint(
+            lambda st, x_: jax.lax.scan(step, st, x_))(state, xs)
+
+    n_chunks = max(1, s // _CHUNK)
+    if s % _CHUNK == 0 and n_chunks > 1:
+        xs = tuple(a.transpose(1, 0, 2, 3).reshape(n_chunks, _CHUNK, b, h, dh)
+                   for a in (r, k, v, w))
+        state, ys = jax.lax.scan(chunk_body, s0, xs)
+        y = ys.reshape(s, b, h, dh).transpose(1, 0, 2, 3)
+    else:
+        xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+        state, ys = jax.lax.scan(step, s0, xs)
+        y = ys.transpose(1, 0, 2, 3)
+    return y, state
+
+
+def rwkv_tm_apply(params: dict, x: Stream, ctx: MatmulContext, cfg: ModelConfig, *,
+                  cache: Optional[dict] = None) -> Tuple[Array, Optional[dict]]:
+    xu = maybe_unpack(x)
+    b, s, d = xu.shape
+    h, dh = _heads(cfg)
+
+    prev = None if cache is None else cache["tm_shift"]
+    xs = _token_shift(xu, prev)
+    mu = params["mu"].astype(xu.dtype)
+    mix = lambda i: xu + mu[i] * (xs - xu)
+    xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+
+    r = linear_apply(params["wr"], xr, ctx, tp="col").reshape(b, s, h, dh)
+    k = linear_apply(params["wk"], xk, ctx, tp="col").reshape(b, s, h, dh)
+    v = linear_apply(params["wv"], xv, ctx, tp="col").reshape(b, s, h, dh)
+    g = jax.nn.silu(linear_apply(params["wg"], xg, ctx, tp="col"))
+
+    lora = jnp.tanh(xw.astype(jnp.float32) @ params["w_a"]) @ params["w_b"]
+    w = jnp.exp(-jnp.exp(params["w0"] + lora)).reshape(b, s, h, dh)
+
+    s0 = (jnp.zeros((b, h, dh, dh), jnp.float32) if cache is None
+          else cache["state"])
+    y, s_final = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), w, params["u"], s0)
+
+    # per-head group norm, then gate
+    mean = jnp.mean(y, -1, keepdims=True)
+    var = jnp.var(y, -1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = (y.reshape(b, s, d) * params["ln_g"]).astype(xu.dtype) * g
+    out = linear_apply(params["wo"], y, ctx, tp="row")
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"tm_shift": xu[:, -1].astype(cache["tm_shift"].dtype),
+                     "state": s_final}
+    return out, new_cache
+
+
+def rwkv_cm_apply(params: dict, x: Stream, ctx: MatmulContext, cfg: ModelConfig, *,
+                  cache: Optional[dict] = None) -> Tuple[Array, Optional[dict]]:
+    xu = maybe_unpack(x)
+    prev = None if cache is None else cache["cm_shift"]
+    xs = _token_shift(xu, prev)
+    mu = params["mu"].astype(xu.dtype)
+    xr = xu + mu[0] * (xs - xu)
+    xk = xu + mu[1] * (xs - xu)
+    k = linear_apply(params["wk"], xk, ctx, activation=jax.nn.relu, tp="col")
+    k = k * k
+    out = jax.nn.sigmoid(linear_apply(params["wr"], xr, ctx)) * \
+        linear_apply(params["wv"], k, ctx, tp="row")
+    new_cache = None
+    if cache is not None:
+        new_cache = {"cm_shift": xu[:, -1].astype(cache["cm_shift"].dtype)}
+    return out, new_cache

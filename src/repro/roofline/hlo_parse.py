@@ -1,0 +1,102 @@
+"""Parse collective traffic out of optimized (post-SPMD-partitioning) HLO.
+
+``compiled.as_text()`` is the per-device partitioned module; GSPMD has
+already materialized the collectives.  We sum the *operand* sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+XLA's text format references operands by name only (``all-gather(%param.1)``),
+so parsing is two-pass: (1) map every instruction name to its result shape,
+(2) resolve collective operand names against that map (falling back to any
+inline-typed operands).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_bytes", "count_ops"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# instruction definition: "%name = <type> opcode(...)" (type may be a tuple)
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^=]*?\)|[a-z0-9]+"
+                  r"\[[0-9,]*\](?:\{[^}]*\})?)\s*([a-z][\w\-]*)\(")
+_TYPED = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND_NAME = re.compile(r"%([\w\.\-]+)")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _TYPED.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {"bytes": {kind: operand_bytes, "total": ...},
+                "counts": {kind: n}}.
+
+    ``-done`` ops are skipped (their operand is the in-flight ``-start``),
+    so async collectives are counted once.
+    """
+    shapes: dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF.match(line)
+        if m:
+            shapes[m.group(1)] = _type_bytes(m.group(2))
+
+    out: dict = defaultdict(int)
+    counts: dict = defaultdict(int)
+    for line in lines:
+        m = _DEF.match(line)
+        if not m:
+            continue
+        opcode = m.group(3)
+        kind = next((c for c in _COLLECTIVES if opcode.startswith(c)), None)
+        if kind is None or opcode.endswith("-done"):
+            continue
+        # operand list: text inside the first parens after the opcode
+        start = line.index(opcode + "(") + len(opcode) + 1
+        depth, end = 1, start
+        while end < len(line) and depth:
+            if line[end] == "(":
+                depth += 1
+            elif line[end] == ")":
+                depth -= 1
+            end += 1
+        operands = line[start:end - 1]
+        typed = _type_bytes(operands)
+        if typed:
+            nbytes = typed
+        else:
+            nbytes = sum(shapes.get(nm, 0)
+                         for nm in _OPERAND_NAME.findall(operands))
+        out[kind] += nbytes
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES if k in out)
+    return {"bytes": dict(out), "counts": dict(counts)}
+
+
+def count_ops(hlo_text: str, names=("fusion", "custom-call", "dot", "convolution",
+                                    "transpose", "copy", "all-gather",
+                                    "all-reduce", "reduce-scatter",
+                                    "all-to-all", "collective-permute")) -> dict:
+    counts = {}
+    for n in names:
+        counts[n] = len(re.findall(rf"\b{re.escape(n)}[\w\-]*\(", hlo_text))
+    return counts

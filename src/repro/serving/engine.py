@@ -1,0 +1,75 @@
+"""Serving engine: batched prefill + decode with sharded caches.
+
+The decode KV cache is sharded along the *sequence* dim over the model axis
+(batch over DP): attention against a sequence-sharded cache lowers to a
+distributed flash-decode (per-shard partial softmax + cross-shard combine),
+which GSPMD derives from the softmax over the sharded dim.  On one device
+this degenerates to ordinary attention — the same code serves both.
+
+Weights are pre-packed once (``prepack_params``) — the paper's amortized
+standalone packing (§4.1) — so decode steps stream packed tiles directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.linear import prepack_params
+from repro.distributed import sharding
+from repro.models.model import ReproModel
+
+__all__ = ["Engine"]
+
+
+class Engine:
+    def __init__(self, model: ReproModel, params, *, mesh=None,
+                 prepack: bool = True):
+        self.model = model
+        self.mesh = mesh
+        self.params = (prepack_params(params, model.ctx)
+                       if prepack and model.cfg.family != "encdec" else params)
+        self._step = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._prefill = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    def generate(self, batch: dict, max_new: int, *,
+                 greedy: bool = True, seed: int = 0) -> np.ndarray:
+        """batch: {"tokens": [B, L] prompt, (+frames/patches)}.
+
+        Returns [B, max_new] generated tokens.
+        """
+        m = self.model
+        prompts = jnp.asarray(batch["tokens"])
+        b, plen = prompts.shape
+        caches = m.prefill_cache(self.params, batch) if m.cfg.family == "encdec" \
+            else m.init_cache(b, m.shape.seq_len)
+
+        embeds = None
+        if m.cfg.family == "vlm":
+            embeds = m._embeds(self.params, batch)
+            logits, caches = self._prefill(self.params, caches,
+                                           jnp.zeros((b, embeds.shape[1]), jnp.int32),
+                                           jnp.int32(0), embeds)
+            pos = embeds.shape[1]
+        else:
+            logits, caches = self._prefill(self.params, caches, prompts,
+                                           jnp.int32(0))
+            pos = plen
+
+        key = jax.random.PRNGKey(seed)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        out = [tok]
+        for i in range(max_new - 1):
+            logits, caches = self._step(self.params, caches, tok,
+                                        jnp.int32(pos + i))
+            if greedy:
+                tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            else:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits[:, -1])[:, None]
+            out.append(tok.astype(jnp.int32))
+        return np.asarray(jnp.concatenate(out, axis=1))

@@ -1,0 +1,46 @@
+"""Int8 error-feedback gradient compression.
+
+Synchronous data-parallel gradients under GSPMD are all-reduced by the
+compiler; this module implements the *compression transform* with an error
+feedback buffer (residual accumulation) so the quantization error is
+re-injected next step — the standard trick that keeps convergence intact
+(1-bit Adam / EF-SGD lineage).  On real multi-slice hardware this transform
+pairs with a shard_map'd int8 all-reduce over the DCN ("pod") axis where
+bandwidth is scarcest; the dry-run documents the bytes saved (32->8 bit) in
+EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_error_buffer", "compress_with_feedback"]
+
+
+def init_error_buffer(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def _q8(x):
+    s = jnp.max(jnp.abs(x)) / 127.0
+    s = jnp.maximum(s, 1e-12)
+    q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def compress_with_feedback(grads, err):
+    """Returns (decompressed_grads, new_err).
+
+    g_hat = Q8(g + err);  new_err = (g + err) - g_hat.
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = _q8(gf)
+        deq = q.astype(jnp.float32) * s
+        return deq.astype(g.dtype), gf - deq
+
+    out = jax.tree.map(one, grads, err)
+    g2 = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    e2 = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return g2, e2

@@ -1,0 +1,86 @@
+"""The jitted train step: loss -> grads (with microbatch accumulation) ->
+optional compression -> AdamW update.
+
+Gradient accumulation bounds activation memory at scale (DESIGN.md §5): the
+global batch is split into ``run.microbatch`` sequential slices scanned with
+fp32 grad accumulation; each slice's backward is remat'd through the layer
+scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.training import compression
+from repro.training.optimizer import AdamW
+from repro.training.train_state import TrainState
+
+__all__ = ["make_train_step", "make_eval_step"]
+
+
+def make_train_step(model, optimizer: AdamW, run: RunConfig) -> Callable:
+    """Returns train_step(state, batch) -> (state', metrics)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def grads_of(params, batch):
+        n = run.microbatch
+        if n <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(n, b // n, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, mb):
+            g_acc, _ = acc
+            (loss, metrics), g = grad_fn(params, mb)
+            g_acc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32) / n,
+                                 g_acc, g)
+            return (g_acc, metrics), None
+
+        (grads, metrics), _ = jax.lax.scan(
+            body, (g0, _zero_metrics(params, batch)), micro)
+        return grads, metrics
+
+    def _zero_metrics(params, batch):
+        # evaluate metric structure once at zero cost via eval_shape
+        shapes = jax.eval_shape(lambda p, b: loss_fn(p, b)[1], params, batch)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        grads, metrics = grads_of(state.params, batch)
+        opt_state = dict(state.opt_state)
+        if run.grad_compression:
+            err = opt_state["err"]
+            grads, err = compression.compress_with_feedback(grads, err)
+            opt_state["err"] = err
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, opt_state, state.params, state.step)
+        if run.grad_compression:
+            new_opt["err"] = opt_state["err"]
+        metrics = {**metrics, **opt_metrics}
+        return TrainState(step=state.step + 1, params=new_params,
+                          opt_state=new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(model) -> Callable:
+    def eval_step(params, batch):
+        _, metrics = model.loss(params, batch)
+        return metrics
+    return eval_step

@@ -1,0 +1,31 @@
+"""Train state pytree."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TrainState"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    step: jnp.ndarray
+    params: Any
+    opt_state: dict
+
+    def tree_flatten(self):
+        return (self.step, self.params, self.opt_state), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def create(cls, params, optimizer) -> "TrainState":
+        return cls(step=jnp.zeros((), jnp.int32), params=params,
+                   opt_state=optimizer.init(params))

@@ -1,0 +1,23 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on 1 device;
+multi-device dry-run coverage goes through subprocesses (test_dryrun.py)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import RunConfig, ShapeSpec
+
+
+@pytest.fixture(scope="session")
+def run_f32():
+    return RunConfig(param_dtype="float32", compute_dtype="float32",
+                     remat=False)
+
+
+@pytest.fixture(scope="session")
+def smoke_shape():
+    return ShapeSpec("smoke", 32, 2, "train")
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,92 @@
+"""Multi-device dry-run integration tests.
+
+These run in SUBPROCESSES because the dry-run needs
+``--xla_force_host_platform_device_count`` set before JAX initializes,
+while the rest of the suite must see 1 device.  Meshes are scaled down
+(16 fake devices) — the full 256/512-chip sweep is the
+``python -m repro.launch.dryrun --all --mesh both`` run recorded in
+EXPERIMENTS.md.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import json, sys, jax
+    from repro.configs import RunConfig
+    from repro.launch import dryrun
+    dryrun.MESHES = {
+        "pod": lambda: jax.make_mesh((4, 4), ("data", "model")),
+        "multipod": lambda: jax.make_mesh((2, 2, 4), ("pod", "data", "model")),
+    }
+    arch, shape, mesh = sys.argv[1:4]
+    run = RunConfig(microbatch=4)
+    rec = dryrun.run_cell(arch, shape, mesh, run, out_dir=None, verbose=False)
+    print("RESULT " + json.dumps({k: rec[k] for k in
+        ("status", "bottleneck", "hlo_flops_per_chip",
+         "collective_bytes_per_chip", "chips")}))
+""")
+
+
+def _run(arch, shape, mesh, timeout=540):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    p = subprocess.run([sys.executable, "-c", _SCRIPT, arch, shape, mesh],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert p.returncode == 0, p.stderr[-3000:]
+    line = [l for l in p.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("smollm2-135m", "train_4k"),
+    ("smollm2-135m", "decode_32k"),
+    ("whisper-small", "train_4k"),
+])
+def test_dryrun_pod_mesh(arch, shape):
+    rec = _run(arch, shape, "pod")
+    assert rec["status"] == "ok"
+    assert rec["hlo_flops_per_chip"] > 0
+    assert rec["chips"] == 16
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_mesh():
+    rec = _run("smollm2-135m", "train_4k", "multipod")
+    assert rec["status"] == "ok"
+    # the pod axis shards: collectives must exist across the mesh
+    assert rec["collective_bytes_per_chip"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_long_context_ssm():
+    """long_500k runs for the sub-quadratic arch (sequence-sharded state)."""
+    rec = _run("rwkv6-1.6b", "decode_32k", "pod")
+    assert rec["status"] == "ok"
+
+
+def test_cell_matrix_skips():
+    from repro.configs import cells, SHAPES, get_config, cell_status
+    all_cells = list(cells(include_skipped=True))
+    assert len(all_cells) == 40  # 10 archs x 4 shapes
+    runnable = [c for c in all_cells if c[2]]
+    skipped = [c for c in all_cells if not c[2]]
+    # long_500k skips exactly the 8 pure full-attention archs
+    assert len(skipped) == 8
+    assert all(s == "long_500k" for _, s, _, _ in skipped)
+    assert {a for a, *_ in skipped} == {
+        "qwen2-7b", "qwen3-8b", "olmo-1b", "chatglm3-6b", "whisper-small",
+        "qwen3-moe-235b-a22b", "arctic-480b", "internvl2-26b"}
+    # SSM/hybrid run it
+    runnable_long = {a for a, s, ok, _ in all_cells if s == "long_500k" and ok}
+    assert runnable_long == {"jamba-v0.1-52b", "rwkv6-1.6b"}

@@ -1,0 +1,79 @@
+"""Roofline machinery: while-aware HLO cost parser calibration."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline.hlo_cost import parse_hlo
+from repro.roofline.analysis import model_flops
+from repro.configs import SHAPES, get_config
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_dot_flops_exact():
+    c = _compile(lambda a, b: a @ b,
+                 jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                 jax.ShapeDtypeStruct((128, 32), jnp.float32))
+    r = parse_hlo(c.as_text())
+    assert r.dot_flops == 2 * 64 * 128 * 32
+
+
+def test_scan_trip_counts_multiply():
+    """The reason this parser exists: XLA cost_analysis counts a scan body
+    once; parse_hlo multiplies by the trip count."""
+    w = jnp.ones((64, 64))
+
+    def f(x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=9)
+        return y
+    c = _compile(f, jax.ShapeDtypeStruct((32, 64), jnp.float32))
+    assert abs(c.cost_analysis()["flops"] - 2 * 32 * 64 * 64) < 64  # body once
+    r = parse_hlo(c.as_text())
+    assert r.dot_flops == 9 * 2 * 32 * 64 * 64                     # corrected
+    assert list(r.while_trips.values()) == [9]
+
+
+def test_nested_scan_trips():
+    w = jnp.ones((32, 32))
+
+    def f(x):
+        def outer(c, _):
+            c, _ = jax.lax.scan(lambda ci, _: (ci @ w, None), c, None, length=3)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+    c = _compile(f, jax.ShapeDtypeStruct((8, 32), jnp.float32))
+    r = parse_hlo(c.as_text())
+    assert r.dot_flops == 15 * 2 * 8 * 32 * 32
+    assert sorted(r.while_trips.values()) == [3, 5]
+
+
+def test_batched_dot_flops():
+    c = _compile(lambda q, k: jnp.einsum("bqhd,bkhd->bhqk", q, k),
+                 jax.ShapeDtypeStruct((2, 64, 4, 32), jnp.float32),
+                 jax.ShapeDtypeStruct((2, 128, 4, 32), jnp.float32))
+    r = parse_hlo(c.as_text())
+    assert r.dot_flops == 2 * 2 * 4 * 64 * 128 * 32
+
+
+def test_hbm_bytes_reasonable():
+    c = _compile(lambda a, b: jnp.tanh(a @ b),
+                 jax.ShapeDtypeStruct((256, 256), jnp.float32),
+                 jax.ShapeDtypeStruct((256, 256), jnp.float32))
+    r = parse_hlo(c.as_text())
+    lo = 3 * 256 * 256 * 4          # read a, b; write out
+    assert lo <= r.hbm_bytes <= 6 * lo
+
+
+def test_model_flops_kinds():
+    cfg = get_config("qwen2-7b")
+    n = cfg.param_counts()["active"]
+    assert model_flops(cfg, SHAPES["train_4k"]) == 6.0 * n * 256 * 4096
+    assert model_flops(cfg, SHAPES["prefill_32k"]) == 2.0 * n * 32 * 32768
+    assert model_flops(cfg, SHAPES["decode_32k"]) == 2.0 * n * 128
+    moe = get_config("qwen3-moe-235b-a22b")
+    assert (model_flops(moe, SHAPES["train_4k"])
+            == 6.0 * moe.param_counts()["active"] * 256 * 4096)
