@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the ROADMAP command, verbatim.
+# Run from the repo root:  ./scripts/tier1.sh
+# The full (slow-included) sweep:  ./scripts/tier1.sh -m slow
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -101,7 +101,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, run: RunConfig,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    cost = compiled.cost_analysis() or {}
+    from repro.roofline.hlo_cost import xla_cost_dict
+    cost = xla_cost_dict(compiled.cost_analysis())
     mem = None
     try:
         ma = compiled.memory_analysis()

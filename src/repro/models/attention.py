@@ -23,7 +23,8 @@ from repro.models.common import Stream, apply_rope, maybe_unpack, norm_apply, no
 
 Array = jnp.ndarray
 
-__all__ = ["attn_init", "attn_apply", "init_kv_cache", "core_attention"]
+__all__ = ["attn_init", "attn_apply", "init_kv_cache", "init_paged_kv_cache",
+           "core_attention", "paged_kv_update"]
 
 
 def attn_init(key, cfg: ModelConfig, dtype=jnp.float32, *, cross: bool = False) -> dict:
@@ -48,6 +49,47 @@ def attn_init(key, cfg: ModelConfig, dtype=jnp.float32, *, cross: bool = False) 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
     shp = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
     return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def init_paged_kv_cache(cfg: ModelConfig, num_pages: int, page_tokens: int,
+                        dtype) -> dict:
+    """Paged pool: KV lives in ``num_pages`` pages of ``page_tokens`` tokens,
+    shared by all sequences via per-request block tables (continuous
+    batching).  Page 0 is reserved as the trash page — writes for padded /
+    inactive positions are routed there so they can never corrupt a live
+    request."""
+    shp = (num_pages, page_tokens, cfg.n_kv_heads, cfg.d_head)
+    return {"k_pages": jnp.zeros(shp, dtype), "v_pages": jnp.zeros(shp, dtype)}
+
+
+def paged_kv_update(cache: dict, k: Array, v: Array, *, block_tables: Array,
+                    lens: Array, new_counts: Array):
+    """Scatter this step's K/V into the page pool, gather each row's logical
+    KV stream back out.
+
+    cache: {"k_pages","v_pages"} [P, T, Hkv, dh] — the pool (page 0 = trash).
+    k, v: [B, S, Hkv, dh] new keys/values; row b's token s sits at logical
+    position ``lens[b] + s`` and is valid iff ``s < new_counts[b]`` (prefill
+    rows are padded up to a layout-aligned bucket; invalid writes go to the
+    trash page).
+    block_tables: [B, MP] page ids per row, in logical order.
+    Returns (new_cache, k_all [B, MP*T, Hkv, dh], v_all, kv_len_mask [B, MP*T]).
+    """
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    t = kp.shape[1]
+    b, s = k.shape[0], k.shape[1]
+    pos = lens[:, None] + jnp.arange(s, dtype=jnp.int32)        # [B,S]
+    valid = jnp.arange(s)[None, :] < new_counts[:, None]
+    slot = jnp.minimum(pos // t, block_tables.shape[1] - 1)
+    page = jnp.take_along_axis(block_tables, slot, axis=1)
+    page = jnp.where(valid, page, 0)
+    off = jnp.where(valid, pos % t, 0)
+    kp = kp.at[page, off].set(k.astype(kp.dtype))
+    vp = vp.at[page, off].set(v.astype(vp.dtype))
+    k_all = kp[block_tables].reshape(b, -1, *kp.shape[2:])
+    v_all = vp[block_tables].reshape(b, -1, *vp.shape[2:])
+    mask = jnp.arange(k_all.shape[1])[None, :] < (lens + new_counts)[:, None]
+    return {"k_pages": kp, "v_pages": vp}, k_all, v_all, mask
 
 
 def core_attention(q: Array, k: Array, v: Array, *, causal: bool,
@@ -113,13 +155,18 @@ def attn_apply(params: dict, x: Stream, ctx: MatmulContext, cfg: ModelConfig, *,
                positions: Array, causal: bool = True,
                kv_cache: Optional[dict] = None, cache_pos: Optional[Array] = None,
                kv_source: Optional[Array] = None,
-               keep_packed: bool = False):
+               keep_packed: bool = False, paged: Optional[dict] = None):
     """Returns (out_stream, new_kv_cache).
 
     Modes:
       - train/prefill: ``kv_cache=None`` — full-sequence attention.
       - decode: ``kv_cache`` given, ``cache_pos`` scalar — writes the new
         K/V at ``cache_pos`` then attends over the cache.
+      - paged decode/prefill (continuous batching): ``paged`` given —
+        ``kv_cache`` is a page pool and ``paged`` carries
+        {block_tables [B,MP], lens [B], new_counts [B]}; every row sits at
+        its own position (``positions`` is [B,S]), K/V are scattered into
+        the row's pages and attention reads the gathered page stream.
       - cross-attention: ``kv_source`` [B,S_enc,D] — K/V from the encoder
         output (positions/causality ignored; no cache mutation here, whisper
         cross K/V are precomputed per request by the serving engine).
@@ -153,7 +200,11 @@ def attn_apply(params: dict, x: Stream, ctx: MatmulContext, cfg: ModelConfig, *,
 
     new_cache = kv_cache
     kv_len_mask = None
-    if kv_cache is not None:
+    if paged is not None:
+        new_cache, k, v, kv_len_mask = paged_kv_update(
+            kv_cache, k, v, block_tables=paged["block_tables"],
+            lens=paged["lens"], new_counts=paged["new_counts"])
+    elif kv_cache is not None:
         # decode: insert this step's K/V at cache_pos, attend over the cache
         kc = jax.lax.dynamic_update_slice(kv_cache["k"], k.astype(kv_cache["k"].dtype),
                                           (0, cache_pos, 0, 0))

@@ -169,6 +169,34 @@ class ReproModel:
             return {"layers": layers, "cross": cross}
         return tfm.init_layer_caches(self.cfg, batch, max_len, dt)
 
+    def init_paged_cache(self, num_pages: int, page_tokens: int,
+                         slots: int) -> dict:
+        """Continuous-batching caches: shared attention page pool + per-slot
+        recurrent state (see :func:`transformer.init_paged_caches`)."""
+        assert self.cfg.family != "encdec", "paged serving: decoder-only LMs"
+        return tfm.init_paged_caches(self.cfg, num_pages, page_tokens, slots,
+                                     self.compute_dtype)
+
+    def paged_decode_step(self, params: dict, caches: dict, token: Array,
+                          block_tables: Array, lens: Array,
+                          new_counts: Array) -> Tuple[Array, dict]:
+        """Continuous-batching token step: every row advances from its own
+        position.  ``token``: [B, s] (s=1 decode; s>1 ragged chunked prefill,
+        rows padded past ``new_counts`` are inert).  ``block_tables``:
+        [B, MP] page ids; ``lens``: [B] tokens already in cache; ``new_counts``:
+        [B] valid new tokens this step (0 = inactive slot).  Returns
+        (logits [B, 1, V] — each row's logits at its last valid token,
+        caches')."""
+        x = embed_apply(params["embed"], token).astype(self.compute_dtype)
+        positions = lens[:, None] + jnp.arange(token.shape[1], dtype=jnp.int32)
+        paged = {"block_tables": block_tables, "lens": lens,
+                 "new_counts": new_counts}
+        logits, new_caches, _ = tfm.lm_apply(
+            params, x, self.ctx, self.cfg, self.run, positions=positions,
+            caches=caches, paged=paged,
+            logits_at=jnp.maximum(new_counts - 1, 0))
+        return logits, new_caches
+
     def prefill_cache(self, params: dict, batch: dict) -> dict:
         """Serving-side: build a cache for decode (whisper: run the encoder
         and materialize cross K/V)."""
@@ -181,6 +209,19 @@ class ReproModel:
             caches["cross"] = encdec_mod.compute_cross_kv(params, enc_out,
                                                           self.ctx, self.cfg)
         return caches
+
+    def jit_step(self, kind: str = "decode"):
+        """Cached jitted step (donating the cache): shared by every Engine
+        built over this model, so serving sessions amortize compilations the
+        way prepacking amortizes packing — re-jitting per engine would
+        recompile identical programs."""
+        if not hasattr(self, "_jit_cache"):
+            self._jit_cache = {}
+        if kind not in self._jit_cache:
+            fn = {"decode": self.decode_step,
+                  "paged": self.paged_decode_step}[kind]
+            self._jit_cache[kind] = jax.jit(fn, donate_argnums=(1,))
+        return self._jit_cache[kind]
 
     def decode_step(self, params: dict, caches: dict, token: Array, pos: Array,
                     embeds: Optional[Array] = None) -> Tuple[Array, dict]:

@@ -29,7 +29,7 @@ Array = jnp.ndarray
 
 __all__ = ["pattern_period", "block_init", "block_apply", "group_init",
            "layers_init", "layers_apply", "lm_init", "lm_apply", "logits_apply",
-           "init_layer_caches", "AUX_ZERO"]
+           "init_layer_caches", "init_paged_caches", "AUX_ZERO"]
 
 AUX_ZERO = {"load_balance": jnp.float32(0), "router_z": jnp.float32(0),
             "dropped_frac": jnp.float32(0)}
@@ -86,7 +86,8 @@ def block_apply(p: dict, x: Stream, ctx: MatmulContext, cfg: ModelConfig, pos: i
                 *, positions: Array, causal: bool = True,
                 cache: Optional[dict] = None, cache_pos: Optional[Array] = None,
                 enc_out: Optional[Array] = None,
-                cross_kv: Optional[dict] = None) -> Tuple[Stream, Optional[dict], dict]:
+                cross_kv: Optional[dict] = None,
+                paged: Optional[dict] = None) -> Tuple[Stream, Optional[dict], dict]:
     """Pre-norm residual block.  Returns (x', cache', aux)."""
     t = cfg.layer_types[pos]
     use_moe = cfg.moe_on_layer(pos)
@@ -99,7 +100,8 @@ def block_apply(p: dict, x: Stream, ctx: MatmulContext, cfg: ModelConfig, pos: i
         mix_cache = None if cache is None else cache.get("kv")
         out, kv = attention.attn_apply(
             p["mixer"], h, ctx, cfg, positions=positions, causal=causal,
-            kv_cache=mix_cache, cache_pos=cache_pos, keep_packed=keep)
+            kv_cache=mix_cache, cache_pos=cache_pos, keep_packed=keep,
+            paged=paged)
         if cache is not None:
             new_cache["kv"] = kv
     elif t == "mamba":
@@ -186,17 +188,46 @@ def init_layer_caches(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (groups,) + x.shape), one)
 
 
+def init_paged_caches(cfg: ModelConfig, num_pages: int, page_tokens: int,
+                      slots: int, dtype) -> dict:
+    """Stacked [G, ...] caches for continuous-batching decode.
+
+    Attention K/V lives in a shared paged pool indexed by per-request block
+    tables ([G, P, T, Hkv, dh]; page ids are shared across groups and
+    pattern slots — one logical page holds a token range's KV for every
+    attention layer).  Recurrent mixer state is O(1)/sequence and stays
+    per-slot dense ([G, slots, ...])."""
+    period = pattern_period(cfg)
+    groups = cfg.n_layers // period
+    one = {}
+    for i in range(period):
+        t = cfg.layer_types[i]
+        c: dict = {}
+        if t == "attn":
+            c["kv"] = attention.init_paged_kv_cache(cfg, num_pages,
+                                                    page_tokens, dtype)
+        elif t == "mamba":
+            c["mamba"] = mamba.init_mamba_cache(cfg, slots, dtype)
+        else:
+            c.update(rwkv6.init_rwkv_cache(cfg, slots, dtype))
+        one[f"p{i}"] = c
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (groups,) + x.shape), one)
+
+
 def layers_apply(params_groups: dict, x: Stream, ctx: MatmulContext,
                  cfg: ModelConfig, run: RunConfig, *, positions: Array,
                  causal: bool = True, caches: Optional[dict] = None,
                  cache_pos: Optional[Array] = None,
                  enc_out: Optional[Array] = None,
-                 cross_kv: Optional[dict] = None):
+                 cross_kv: Optional[dict] = None,
+                 paged: Optional[dict] = None):
     """Returns (x', new_caches, aux).
 
     Modes: train/prefill (``caches=None``; ``enc_out`` optionally closed over
     for cross-attention) and decode (``caches`` stacked [G, ...]; whisper
-    decode additionally passes per-layer precomputed ``cross_kv``).
+    decode additionally passes per-layer precomputed ``cross_kv``; paged
+    continuous-batching decode passes ``paged`` block-table state shared by
+    every group).
     """
     period = pattern_period(cfg)
 
@@ -209,7 +240,8 @@ def layers_apply(params_groups: dict, x: Stream, ctx: MatmulContext,
                 gp[f"p{i}"], x, ctx, cfg, i, positions=positions, causal=causal,
                 cache=None if gc is None else gc[f"p{i}"], cache_pos=cache_pos,
                 enc_out=enc_out,
-                cross_kv=None if gkv is None else gkv[f"p{i}"])
+                cross_kv=None if gkv is None else gkv[f"p{i}"],
+                paged=paged)
             if gc is not None:
                 new_gc[f"p{i}"] = nc
             aux_g = {k: aux_g[k] + aux[k] for k in aux_g}
@@ -268,19 +300,26 @@ def logits_apply(params: dict, x: Stream, ctx: MatmulContext, cfg: ModelConfig) 
 
 def lm_apply(params: dict, embeds: Array, ctx: MatmulContext, cfg: ModelConfig,
              run: RunConfig, *, positions: Array, caches=None, cache_pos=None,
-             last_only: bool = False):
+             last_only: bool = False, paged=None,
+             logits_at: Optional[Array] = None):
     """embeds: [B, S, D] input embeddings (token and/or stub-modality).
 
     Returns (logits [B,S,V] (or [B,1,V] when ``last_only`` — the serving
     prefill path, which skips the full-sequence vocab projection), caches,
-    aux).
+    aux).  ``logits_at``: [B] per-row position — emit logits for that
+    position only (ragged prefill: each row's last *valid* token differs).
     """
     x: Stream = maybe_pack(embeds, ctx)
     x, new_caches, aux = layers_apply(params["groups"], x, ctx, cfg, run,
                                       positions=positions, caches=caches,
-                                      cache_pos=cache_pos)
+                                      cache_pos=cache_pos, paged=paged)
     x = norm_apply(params["ln_f"], x, cfg.norm)
-    if last_only:
+    if logits_at is not None:
+        x = jnp.take_along_axis(maybe_unpack(x),
+                                logits_at[:, None, None].astype(jnp.int32),
+                                axis=1)
+        x = maybe_pack(x, ctx)
+    elif last_only:
         x = maybe_unpack(x)[:, -1:, :]
         x = maybe_pack(x, ctx)
     logits = logits_apply(params, x, ctx, cfg)

@@ -73,7 +73,8 @@ def roofline_terms(*, arch: str, shape_spec: ShapeSpec, mesh_name: str,
     # counts scan bodies once, so it undercounts scanned-layer programs by
     # the trip-count product; parse_hlo re-derives per-device dot FLOPs,
     # HBM traffic and collective bytes with execution counts.
-    from repro.roofline.hlo_cost import parse_hlo
+    from repro.roofline.hlo_cost import parse_hlo, xla_cost_dict
+    cost = xla_cost_dict(cost)
     parsed = parse_hlo(hlo_text)
     flops = float(parsed.dot_flops)
     nbytes = float(parsed.hbm_bytes)

@@ -1,47 +1,202 @@
-"""Serving engine: batched prefill + decode with sharded caches.
+"""Serving engine: continuous batching over a paged, layout-aware KV cache.
 
-The decode KV cache is sharded along the *sequence* dim over the model axis
-(batch over DP): attention against a sequence-sharded cache lowers to a
-distributed flash-decode (per-shard partial softmax + cross-shard combine),
-which GSPMD derives from the softmax over the sharded dim.  On one device
-this degenerates to ordinary attention — the same code serves both.
+The engine owns a fixed set of decode **slots** (the compiled decode step
+shape never changes), a paged KV pool (page size = ``round_up(page_tokens,
+m_r)`` of the active packed layout — KV pages are whole microkernel tiles),
+and a FCFS :class:`~repro.serving.scheduler.Scheduler`.  Per engine step:
 
-Weights are pre-packed once (``prepack_params``) — the paper's amortized
-standalone packing (§4.1) — so decode steps stream packed tiles directly.
+  1. admission: waiting requests take free slots; each is prefilled at its
+     own (layout-bucketed) length — no cross-request prompt padding;
+  2. decode: every running slot advances one token in a single fixed-shape
+     batched ``paged_decode_step`` (inactive slots write to the trash page);
+  3. eviction: finished requests release slot + pages immediately.
+
+Rows are mathematically independent (per-row attention over per-row pages,
+per-row softmax/argmax), so a request's greedy output is identical whatever
+else shares the batch — admission order cannot change results.
+
+The decode KV pool is sequence-shardable over the model axis (pages are the
+sequence chunks; ``repro.distributed.sharding.cache_specs``) and weights are
+pre-packed once (``prepack_params``) — the paper's amortized standalone
+packing (§4.1) — so decode steps stream packed tiles directly.
+
+``generate`` is a thin compatibility wrapper over add_request/step; the
+encoder-decoder and VLM families (per-request encoder state, patch-prefix
+prefill) still use the static-batch path (``generate_static``).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.layout import ceil_div, round_up
 from repro.core.linear import prepack_params
 from repro.distributed import sharding
 from repro.models.model import ReproModel
+from repro.serving.kv_cache import (PagedKVPool, fresh_slot_states,
+                                    merge_slot, prefill_view)
+from repro.serving.scheduler import Request, Scheduler
 
 __all__ = ["Engine"]
+
+_STATIC_FAMILIES = ("encdec", "vlm")
 
 
 class Engine:
     def __init__(self, model: ReproModel, params, *, mesh=None,
-                 prepack: bool = True):
+                 prepack: bool = True, max_slots: Optional[int] = None,
+                 page_tokens: int = 16, num_pages: Optional[int] = None):
         self.model = model
         self.mesh = mesh
         self.params = (prepack_params(params, model.ctx)
                        if prepack and model.cfg.family != "encdec" else params)
-        self._step = jax.jit(model.decode_step, donate_argnums=(1,))
-        self._prefill = jax.jit(model.decode_step, donate_argnums=(1,))
+        # static-batch path (encdec/vlm generate, throughput baselines);
+        # prefill ([B, plen]) and decode ([B, 1]) are two traces of the one
+        # model-cached jit — engines over the same model share compilations
+        self._step = self._prefill = model.jit_step("decode")
 
-    def generate(self, batch: dict, max_new: int, *,
-                 greedy: bool = True, seed: int = 0) -> np.ndarray:
+        self.continuous = model.cfg.family not in _STATIC_FAMILIES
+        self._next_rid = 0
+        if not self.continuous:
+            return
+
+        layout = model.ctx.layout(model.compute_dtype)
+        self._bucket = layout.m_r if all(
+            t == "attn" for t in model.cfg.layer_types) else 1
+        self.slots = max_slots or model.shape.global_batch
+        max_len = model.shape.seq_len
+        page_tokens = round_up(page_tokens, layout.m_r)
+        if num_pages is None:
+            num_pages = 1 + self.slots * ceil_div(max_len, page_tokens)
+        self.pool = PagedKVPool(num_pages, page_tokens)
+        self.max_pages = ceil_div(max_len, self.pool.page_tokens)
+        self.scheduler = Scheduler(self.slots, self.pool, max_len)
+        self.caches = model.init_paged_cache(num_pages, self.pool.page_tokens,
+                                             self.slots)
+        if mesh is not None:
+            specs = sharding.cache_specs(self.caches, mesh, model.run,
+                                         self.slots)
+            self.caches = jax.device_put(self.caches,
+                                         sharding.named(mesh, specs))
+        self._paged_step = model.jit_step("paged")
+
+    # ------------------------------------------------------------------
+    # continuous-batching API
+    # ------------------------------------------------------------------
+    def add_request(self, tokens, max_new: int, *, eos_id: Optional[int] = None,
+                    arrival: float = 0.0) -> int:
+        """Queue one request.  Returns its request id."""
+        assert self.continuous, \
+            f"{self.model.cfg.family} serves via generate_static"
+        rid = self._next_rid
+        self._next_rid += 1
+        prompt = np.asarray(tokens, np.int32).reshape(-1)
+        self.scheduler.add(Request(rid=rid, prompt=prompt, max_new=max_new,
+                                   eos_id=eos_id, arrival=arrival))
+        return rid
+
+    def step(self, *, now: Optional[float] = None, greedy: bool = True,
+             seed: int = 0) -> List[Request]:
+        """One engine step: admit + prefill, then batched decode.  Returns
+        requests finished during this step."""
+        finished = []
+        for req in self.scheduler.admit(now):
+            self._prefill_request(req, greedy, seed)
+            if req.done():
+                self.scheduler.finish(req)
+                finished.append(req)
+        running = self.scheduler.running
+        if running:
+            b, mp = self.slots, self.max_pages
+            token = np.zeros((b, 1), np.int32)
+            lens = np.zeros((b,), np.int32)
+            counts = np.zeros((b,), np.int32)
+            bt = np.zeros((b, mp), np.int32)
+            for slot, req in running.items():
+                token[slot, 0] = req.out_tokens[-1]
+                lens[slot] = req.len
+                counts[slot] = 1
+                bt[slot] = req.pages.block_row(mp)
+            logits, self.caches = self._paged_step(
+                self.params, self.caches, jnp.asarray(token), jnp.asarray(bt),
+                jnp.asarray(lens), jnp.asarray(counts))
+            rows = np.asarray(logits[:, 0, :])
+            for slot, req in list(running.items()):
+                req.out_tokens.append(self._pick(rows[slot], req, greedy, seed))
+                req.len += 1
+                if req.done():
+                    self.scheduler.finish(req)
+                    finished.append(req)
+        return finished
+
+    def drain(self, *, greedy: bool = True, seed: int = 0) -> List[Request]:
+        """Run steps until every queued request has finished."""
+        finished = []
+        while self.scheduler.has_work:
+            finished.extend(self.step(greedy=greedy, seed=seed))
+        return finished
+
+    def _prefill_request(self, req: Request, greedy: bool, seed: int) -> None:
+        """Prefill one admitted request at its own length (rounded up to a
+        packed-tile bucket so prompt-length compilations amortize across
+        requests; padded rows are masked into the trash page)."""
+        l = req.prompt_len
+        bucket = round_up(l, self._bucket)
+        token = np.zeros((1, bucket), np.int32)
+        token[0, :l] = req.prompt
+        bt = req.pages.block_row(self.max_pages)[None]
+        view = prefill_view(self.caches, fresh_slot_states(self.caches))
+        logits, updated = self._paged_step(
+            self.params, view, jnp.asarray(token), jnp.asarray(bt),
+            jnp.zeros((1,), jnp.int32), jnp.full((1,), l, jnp.int32))
+        self.caches = merge_slot(self.caches, updated, req.slot)
+        req.len = l
+        req.out_tokens.append(
+            self._pick(np.asarray(logits[0, 0, :]), req, greedy, seed))
+
+    def _pick(self, logits_row: np.ndarray, req: Request, greedy: bool,
+              seed: int) -> int:
+        if greedy:
+            return int(np.argmax(logits_row))
+        # per-request, per-position key: sampling is reproducible and
+        # independent of batch composition, like the greedy path
+        key = jax.random.fold_in(jax.random.fold_in(
+            jax.random.PRNGKey(seed), req.rid), len(req.out_tokens))
+        return int(jax.random.categorical(key, jnp.asarray(logits_row)))
+
+    # ------------------------------------------------------------------
+    # batch API
+    # ------------------------------------------------------------------
+    def generate(self, batch: dict, max_new: int, *, greedy: bool = True,
+                 seed: int = 0) -> np.ndarray:
         """batch: {"tokens": [B, L] prompt, (+frames/patches)}.
 
-        Returns [B, max_new] generated tokens.
+        Returns [B, max_new] generated tokens.  Compatibility wrapper: for
+        decoder-only families each row becomes a request served by the
+        continuous engine (results are identical to serving it alone);
+        encdec/vlm use the static path.
         """
+        if not self.continuous:
+            return self.generate_static(batch, max_new, greedy=greedy,
+                                        seed=seed)
+        assert not self.scheduler.has_work, \
+            "generate() needs an idle engine; use add_request/step instead"
+        prompts = np.asarray(batch["tokens"])
+        rids = [self.add_request(prompts[i], max_new)
+                for i in range(prompts.shape[0])]
+        by_rid = {r.rid: r for r in self.drain(greedy=greedy, seed=seed)}
+        return np.stack([np.asarray(by_rid[rid].out_tokens[:max_new])
+                         for rid in rids]).astype(np.int32)
+
+    def generate_static(self, batch: dict, max_new: int, *,
+                        greedy: bool = True, seed: int = 0) -> np.ndarray:
+        """Static-batch generation (the pre-continuous-batching loop): every
+        request in the batch shares one prompt length and decodes lock-step
+        to ``max_new``.  Kept for encdec/vlm and as the benchmark baseline."""
         m = self.model
         prompts = jnp.asarray(batch["tokens"])
         b, plen = prompts.shape

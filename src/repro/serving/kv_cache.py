@@ -1,0 +1,161 @@
+"""Paged, layout-aware KV cache for continuous-batching serving.
+
+The decode KV cache is a pool of fixed-size **pages** shared by all live
+requests; each request owns an ordered list of page ids (its *block table*)
+covering logical positions ``0 .. len-1``.  Admitting a request allocates
+pages, finishing one returns them — sequences of different lengths coexist
+without padding the cache to a common length.
+
+The page size is derived from the active :class:`~repro.core.layout.
+PackedLayout`: ``page_tokens = round_up(requested, m_r)``, so a page always
+holds a whole number of microkernel M-tiles and decode attention reads
+tiles the mmt4d kernels can consume directly — the paper's amortized
+prepacking argument (§4.1) extended from weights to KV pages.
+
+Device-side pool arrays live inside the engine's cache pytree
+(``{"k_pages","v_pages"}: [G, P, T, Hkv, dh]``, built by
+``transformer.init_paged_caches``); this module owns the host-side
+bookkeeping (allocator, per-request block tables) plus the pytree helpers
+that separate shared page pools from per-slot recurrent state.
+
+Page 0 is reserved as the **trash page**: padded prefill positions and
+inactive decode slots scatter their (masked-out) K/V there, so a fixed-shape
+step can never corrupt a live request.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layout import PackedLayout, ceil_div, round_up
+
+__all__ = ["OutOfPages", "PagedKVPool", "SequencePages",
+           "fresh_slot_states", "prefill_view", "merge_slot",
+           "map_slot_states"]
+
+
+class OutOfPages(RuntimeError):
+    """The pool cannot satisfy an allocation (admission must wait)."""
+
+
+class PagedKVPool:
+    """Host-side page allocator for the device page pool.
+
+    ``page_tokens`` is rounded up to a multiple of the layout's ``m_r`` so
+    page boundaries coincide with packed-tile boundaries.  Page 0 is the
+    trash page and is never handed out.
+    """
+
+    def __init__(self, num_pages: int, page_tokens: int,
+                 layout: Optional[PackedLayout] = None):
+        if layout is not None:
+            page_tokens = round_up(page_tokens, layout.m_r)
+        assert num_pages >= 2, "need at least the trash page + one real page"
+        self.num_pages = num_pages
+        self.page_tokens = page_tokens
+        # LIFO free list → recently-freed (cache-warm) pages are reused first
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def pages_for(self, tokens: int) -> int:
+        return ceil_div(max(0, tokens), self.page_tokens)
+
+    def can_fit(self, tokens: int) -> bool:
+        return self.pages_for(tokens) <= self.num_free
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise OutOfPages("KV pool exhausted")
+        return self._free.pop()
+
+    def free(self, pages: Iterable[int]) -> None:
+        for p in pages:
+            assert 0 < p < self.num_pages, p
+            self._free.append(p)
+
+
+@dataclasses.dataclass
+class SequencePages:
+    """One request's block table: ordered page ids covering 0..len-1."""
+
+    pool: PagedKVPool
+    pages: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def capacity(self) -> int:
+        return len(self.pages) * self.pool.page_tokens
+
+    def ensure(self, tokens: int) -> None:
+        """Grow the block table to cover ``tokens`` logical positions.
+        All-or-nothing: a partial allocation is rolled back on failure."""
+        start = len(self.pages)
+        try:
+            while self.capacity < tokens:
+                self.pages.append(self.pool.alloc())
+        except OutOfPages:
+            self.pool.free(self.pages[start:])
+            del self.pages[start:]
+            raise
+
+    def release(self) -> None:
+        self.pool.free(self.pages)
+        self.pages = []
+
+    def block_row(self, max_pages: int) -> np.ndarray:
+        assert len(self.pages) <= max_pages, (len(self.pages), max_pages)
+        row = np.zeros((max_pages,), np.int32)
+        row[:len(self.pages)] = self.pages
+        return row
+
+
+# ---------------------------------------------------------------------------
+# cache-pytree helpers: page pools are shared, recurrent state is per-slot
+# ---------------------------------------------------------------------------
+
+def map_slot_states(caches, fn):
+    """Apply ``fn`` to per-slot recurrent leaves ([G, slots, ...]); pass the
+    shared ``*_pages`` pool leaves through unchanged."""
+    if isinstance(caches, dict):
+        return {k: (v if k.endswith("_pages") else map_slot_states(v, fn))
+                for k, v in caches.items()}
+    return fn(caches)
+
+
+def fresh_slot_states(caches):
+    """A zeroed single-slot ([G, 1, ...]) recurrent-state tree matching
+    ``caches`` — the state a request starts prefill from."""
+    return map_slot_states(
+        caches, lambda x: jnp.zeros(x.shape[:1] + (1,) + x.shape[2:], x.dtype))
+
+
+def prefill_view(caches, fresh):
+    """Single-slot cache view for prefill: shared pools from ``caches``,
+    recurrent state from the zeroed single-slot tree ``fresh``."""
+    if isinstance(caches, dict):
+        return {k: (v if k.endswith("_pages") else prefill_view(v, fresh[k]))
+                for k, v in caches.items()}
+    return fresh
+
+
+def merge_slot(caches, updated, slot: int):
+    """Merge a prefill result back: pools are taken from ``updated`` (pages
+    were written there), the [G, 1, ...] recurrent state is written into row
+    ``slot`` of the full tree."""
+    if isinstance(caches, dict):
+        return {k: (updated[k] if k.endswith("_pages")
+                    else merge_slot(v, updated[k], slot))
+                for k, v in caches.items()}
+    return jax.lax.dynamic_update_slice_in_dim(
+        caches, updated.astype(caches.dtype), slot, axis=1)

@@ -1,0 +1,123 @@
+"""Continuous-batching scheduler: FCFS admission into fixed decode slots.
+
+The engine owns a fixed number of decode *slots* (rows of the batched decode
+step — the compiled step shape never changes).  The scheduler:
+
+  - queues incoming requests (FCFS; ``arrival`` lets benchmarks replay a
+    trace),
+  - admits a waiting request when a slot is free AND the KV pool can hold
+    its whole lifetime (prompt + max_new tokens — reservation up front means
+    a running request can never die of pool exhaustion mid-flight;
+    preemption/recompute is future work, see ROADMAP),
+  - interleaves prefill and decode: newly-admitted requests are prefilled
+    one at a time (each at its own length — no cross-request prompt
+    padding), then every running slot advances one token per engine step,
+  - evicts finished requests, returning their slot and pages to the free
+    lists immediately; the next waiting request takes the slot at the next
+    step's admission phase.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.kv_cache import PagedKVPool, SequencePages
+
+__all__ = ["Request", "Scheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its runtime state."""
+
+    rid: int
+    prompt: np.ndarray            # [L] int32 prompt tokens
+    max_new: int
+    eos_id: Optional[int] = None
+    arrival: float = 0.0
+
+    # runtime state (owned by the scheduler/engine)
+    status: str = "waiting"       # waiting | running | finished
+    slot: int = -1
+    pages: Optional[SequencePages] = None
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    len: int = 0                  # tokens whose KV is in the cache
+    finish_reason: Optional[str] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def kv_budget(self) -> int:
+        """KV slots this request can ever occupy: the prompt plus every
+        generated token that is fed back (the final token never is)."""
+        return self.prompt_len + self.max_new - 1
+
+    def done(self) -> bool:
+        if len(self.out_tokens) >= self.max_new:
+            self.finish_reason = self.finish_reason or "length"
+            return True
+        if self.eos_id is not None and self.out_tokens \
+                and self.out_tokens[-1] == self.eos_id:
+            self.finish_reason = "eos"
+            return True
+        return False
+
+
+class Scheduler:
+    def __init__(self, max_slots: int, pool: PagedKVPool, max_len: int):
+        self.max_slots = max_slots
+        self.pool = pool
+        self.max_len = max_len
+        self.waiting: Deque[Request] = deque()
+        self.running: Dict[int, Request] = {}          # slot -> request
+        self._free_slots: List[int] = list(range(max_slots - 1, -1, -1))
+
+    # ------------------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    @property
+    def num_free_slots(self) -> int:
+        return len(self._free_slots)
+
+    def add(self, req: Request) -> None:
+        assert req.kv_budget <= self.max_len, \
+            f"request {req.rid}: KV budget {req.kv_budget} (prompt " \
+            f"{req.prompt_len} + max_new {req.max_new} - 1) exceeds " \
+            f"engine max_len {self.max_len}"
+        req.status = "waiting"
+        self.waiting.append(req)
+
+    def admit(self, now: Optional[float] = None) -> List[Request]:
+        """Admit waiting requests (FCFS) while a slot is free and the pool
+        can hold their full KV budget.  Returns the newly-admitted requests;
+        the engine prefills them.  ``now`` gates admission by arrival time
+        (benchmark trace replay)."""
+        admitted = []
+        while (self.waiting and self._free_slots
+               and (now is None or self.waiting[0].arrival <= now)
+               and self.pool.can_fit(self.waiting[0].kv_budget)):
+            req = self.waiting.popleft()
+            req.slot = self._free_slots.pop()
+            req.status = "running"
+            req.pages = SequencePages(self.pool)
+            req.pages.ensure(req.kv_budget)   # reserve the whole lifetime
+            self.running[req.slot] = req
+            admitted.append(req)
+        return admitted
+
+    def finish(self, req: Request) -> None:
+        """Evict: return the slot and the pages to the free lists."""
+        assert self.running.get(req.slot) is req
+        del self.running[req.slot]
+        req.pages.release()
+        self._free_slots.append(req.slot)
+        req.slot = -1
+        req.status = "finished"

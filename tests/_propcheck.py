@@ -1,0 +1,85 @@
+"""Seeded-random property-check fallback for ``hypothesis``.
+
+The property tests import ``from hypothesis import given, settings,
+strategies as st``.  When hypothesis is not installed, ``conftest.py``
+installs this module under ``sys.modules["hypothesis"]`` so the test modules
+always collect and the properties still run — as a deterministic seeded
+sweep instead of an adaptive search.
+
+Semantics implemented (the subset the suite uses):
+  - ``st.integers(lo, hi)``: uniform draw in [lo, hi] + the corner values
+    (lo and hi are always exercised first — shrink-target analogues).
+  - ``@settings(max_examples=N, deadline=...)``: records N on the function.
+  - ``@given(**strategies)``: runs the wrapped test for
+    ``min(N, REPRO_PROP_EXAMPLES)`` deterministic examples.  The draw
+    sequence depends only on the test name, so runs are reproducible.
+
+``REPRO_PROP_EXAMPLES`` (default 3) caps the per-property example count to
+keep tier-1 fast (every distinct drawn shape is a fresh XLA compile); set it
+higher for a deeper local sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Integers:
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+
+    def corner(self, i: int) -> int:
+        return (self.lo, self.hi)[i % 2]
+
+    def draw(self, rng: random.Random) -> int:
+        return rng.randint(self.lo, self.hi)
+
+
+class strategies:  # mimics `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Integers:
+        return _Integers(min_value, max_value)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        requested = getattr(fn, "_propcheck_max_examples", _DEFAULT_EXAMPLES)
+        cap = int(os.environ.get("REPRO_PROP_EXAMPLES", "3"))
+        n = max(2, min(requested, cap))
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(f"propcheck:{fn.__module__}.{fn.__qualname__}")
+            for i in range(n):
+                if i < 2:  # corner examples first: all-lo, then all-hi
+                    drawn = {k: s.corner(i) for k, s in strats.items()}
+                else:
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property falsified on example {i}: {drawn}") from e
+
+        # pytest must not see the drawn parameters as fixtures
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for name, p in sig.parameters.items()
+                        if name not in strats])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -83,10 +83,11 @@ def test_partial_rope_leaves_tail_untouched():
 # MoE invariants (hypothesis)
 # ---------------------------------------------------------------------------
 
-@given(seed=st.integers(0, 1000), tokens=st.integers(4, 40),
+@given(seed=st.integers(0, 1000), tokens8=st.integers(1, 5),
        topk=st.integers(1, 3))
 @settings(max_examples=15, deadline=None)
-def test_moe_dispatch_invariants(seed, tokens, topk):
+def test_moe_dispatch_invariants(seed, tokens8, topk):
+    tokens = 8 * tokens8  # coarse token grid: bounds distinct XLA compiles
     cfg = dataclasses.replace(reduced_config(get_config("qwen3-moe-235b-a22b")),
                               top_k=topk, capacity_factor=1.25)
     p = moe.moe_init(jax.random.PRNGKey(seed), cfg, jnp.float32)

@@ -1,0 +1,202 @@
+"""Continuous-batching scheduler + paged KV pool invariants.
+
+Covers the serving subsystem's contracts:
+  - page size is always a multiple of the active layout's ``m_r``;
+  - page allocation/free is balanced after eviction (no leaks);
+  - ragged arrivals produce identical per-request tokens as serving each
+    request alone;
+  - greedy decode is deterministic under reordered admission;
+  - admission waits (FCFS) when slots or pages are exhausted and resumes
+    after eviction.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, ShapeSpec, get_config, reduced_config
+from repro.core.hardware import presets
+from repro.core.layout import make_layout
+from repro.models.model import build_model
+from repro.serving.engine import Engine
+from repro.serving.kv_cache import OutOfPages, PagedKVPool, SequencePages
+from repro.serving.scheduler import Request, Scheduler
+
+RUN = RunConfig(param_dtype="float32", compute_dtype="float32", remat=False)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = reduced_config(get_config("smollm2-135m"), layers=2)
+    shape = ShapeSpec("serve", 64, 3, "decode")
+    m = build_model(cfg, RUN, shape)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _prompts(cfg, lens, seed=1):
+    key = jax.random.PRNGKey(seed)
+    return [np.asarray(jax.random.randint(jax.random.fold_in(key, i), (l,),
+                                          0, cfg.vocab))
+            for i, l in enumerate(lens)]
+
+
+@pytest.fixture(scope="module")
+def singles(smollm):
+    """Reference outputs: each request served entirely alone."""
+    cfg, m, params = smollm
+    lens, news = [5, 11, 8, 3], [6, 4, 9, 7]
+    prompts = _prompts(cfg, lens)
+    eng = Engine(m, params, max_slots=3)
+    outs = []
+    for p, n in zip(prompts, news):
+        eng.add_request(p, n)
+        outs.append(eng.drain()[0].out_tokens)
+    return prompts, news, outs
+
+
+# ---------------------------------------------------------------------------
+# pool
+# ---------------------------------------------------------------------------
+
+def test_page_size_is_layout_tile_multiple():
+    """The layout contract: pages hold whole microkernel M-tiles, for every
+    policy / hardware VL / dtype."""
+    for policy in ("scalable", "fixed", "unpacked"):
+        for hw in ("tpu_v5e", "tpu_vl256", "tpu_vl512"):
+            for dt in (jnp.float32, jnp.bfloat16, jnp.int8):
+                lay = make_layout(policy, presets[hw], dt)
+                for req in (1, 7, 16, 33):
+                    pool = PagedKVPool(4, req, lay)
+                    assert pool.page_tokens % lay.m_r == 0
+                    assert pool.page_tokens >= req
+
+
+def test_pool_alloc_free_balance():
+    pool = PagedKVPool(9, 8)         # 8 usable pages (page 0 = trash)
+    assert pool.num_free == 8 and pool.num_used == 0
+    seqs = [SequencePages(pool) for _ in range(3)]
+    for s, tokens in zip(seqs, (5, 17, 24)):
+        s.ensure(tokens)
+    assert [len(s.pages) for s in seqs] == [1, 3, 3]
+    assert pool.num_used == 7
+    assert 0 not in {p for s in seqs for p in s.pages}  # trash page never given
+    seqs[1].release()
+    assert pool.num_used == 4 and pool.num_free == 4
+    with pytest.raises(OutOfPages):
+        SequencePages(pool).ensure(8 * 8)               # 8 pages > 4 free
+    for s in seqs:
+        s.release()
+    assert pool.num_used == 0 and pool.num_free == 8
+
+
+def test_engine_page_size_multiple_of_m_r(smollm):
+    cfg, m, params = smollm
+    eng = Engine(m, params, page_tokens=3)   # deliberately unaligned request
+    lay = m.ctx.layout(m.compute_dtype)
+    assert eng.pool.page_tokens % lay.m_r == 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler admission / eviction
+# ---------------------------------------------------------------------------
+
+def test_admission_waits_for_slots_and_pages():
+    pool = PagedKVPool(1 + 6, 8)
+    sched = Scheduler(max_slots=2, pool=pool, max_len=48)
+
+    def req(rid, plen, max_new):
+        return Request(rid=rid, prompt=np.zeros(plen, np.int32),
+                       max_new=max_new)
+
+    for r in (req(0, 8, 9), req(1, 8, 9), req(2, 8, 9)):
+        sched.add(r)
+    first = sched.admit()
+    assert [r.rid for r in first] == [0, 1]      # slots exhausted; FCFS
+    assert sched.admit() == []
+    assert pool.num_used == 4                    # 2 pages reserved per request
+    sched.finish(first[0])
+    assert pool.num_used == 2
+    nxt = sched.admit()
+    assert [r.rid for r in nxt] == [2]           # eviction frees the slot
+
+    # pool-bound: a huge request blocks even though a slot is free
+    sched.add(req(3, 8, 41))                     # needs 6 pages, 2 free
+    assert sched.admit() == []
+    sched.finish(first[1])
+    sched.finish(nxt[0])
+    assert [r.rid for r in sched.admit()] == [3]
+    assert sched.num_free_slots == 1
+
+
+def test_request_budget_checked_against_max_len():
+    pool = PagedKVPool(8, 8)
+    sched = Scheduler(max_slots=2, pool=pool, max_len=16)
+    with pytest.raises(AssertionError):
+        sched.add(Request(rid=0, prompt=np.zeros(10, np.int32), max_new=10))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: ragged arrivals, determinism, balance after eviction
+# ---------------------------------------------------------------------------
+
+def test_ragged_arrivals_match_single_request(smollm, singles):
+    cfg, m, params = smollm
+    prompts, news, want = singles
+
+    eng2 = Engine(m, params, max_slots=3)    # 4 requests contend for 3 slots
+    rids = [eng2.add_request(p, n) for p, n in zip(prompts, news)]
+    fin = {r.rid: r.out_tokens for r in eng2.drain()}
+    for rid, w in zip(rids, want):
+        assert fin[rid] == w
+    # balanced after eviction: every page and slot returned
+    assert eng2.pool.num_used == 0
+    assert eng2.scheduler.num_free_slots == 3
+
+
+def test_greedy_deterministic_under_reordered_admission(smollm, singles):
+    cfg, m, params = smollm
+    prompts, news, want = singles
+
+    eng = Engine(m, params, max_slots=2)     # different slot count, too
+    order = [3, 1, 0, 2]
+    rids = {i: eng.add_request(prompts[i], news[i]) for i in order}
+    fin = {r.rid: r.out_tokens for r in eng.drain()}
+    for i in order:
+        assert fin[rids[i]] == want[i]  # batch composition is irrelevant
+
+
+def test_step_interleaves_admission_and_decode(smollm):
+    """A slot freed by eviction is re-used at the very next admission phase
+    (continuous, not batch-synchronous), and arrival times gate admission."""
+    cfg, m, params = smollm
+    prompts = _prompts(cfg, [4, 4, 4])
+    eng = Engine(m, params, max_slots=1)
+    eng.add_request(prompts[0], 2, arrival=0.0)
+    eng.add_request(prompts[1], 2, arrival=0.0)
+    eng.add_request(prompts[2], 2, arrival=99.0)
+
+    fin = eng.step(now=0.0)          # r0 prefill (tok 1) + decode (tok 2)
+    assert [r.rid for r in fin] == [0]
+    fin = eng.step(now=1.0)          # r1 takes r0's slot immediately
+    assert [r.rid for r in fin] == [1]
+    assert eng.step(now=50.0) == [] # r2 hasn't arrived yet
+    assert not eng.scheduler.running
+    fin = eng.step(now=99.0)
+    assert [r.rid for r in fin] == [2]
+    assert not eng.scheduler.has_work
+
+
+def test_eos_finishes_early(smollm):
+    cfg, m, params = smollm
+    [p] = _prompts(cfg, [6])
+    eng = Engine(m, params, max_slots=2)
+    eng.add_request(p, 8)
+    want = eng.drain()[0].out_tokens
+    eos = want[2]
+    eng.add_request(p, 8, eos_id=eos)
+    got = eng.drain()[0]
+    assert got.out_tokens == want[:3]
+    assert got.finish_reason == "eos"
+    assert eng.pool.num_used == 0

@@ -20,9 +20,16 @@ def _setup(arch, max_len=64):
     return cfg, m, params
 
 
+@pytest.fixture(scope="module")
+def smollm_serve():
+    """One smollm2 model shared by the smollm2 serving tests — engines over
+    the same model share step compilations (model.jit_step)."""
+    return _setup("smollm2-135m")
+
+
 @pytest.mark.parametrize("arch", ["smollm2-135m", "rwkv6-1.6b", "whisper-small"])
-def test_generate_shapes_and_determinism(arch):
-    cfg, m, params = _setup(arch)
+def test_generate_shapes_and_determinism(arch, smollm_serve):
+    cfg, m, params = smollm_serve if arch == "smollm2-135m" else _setup(arch)
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
                                           cfg.vocab)}
     if cfg.family == "encdec":
@@ -37,13 +44,11 @@ def test_generate_shapes_and_determinism(arch):
     assert out1.min() >= 0 and out1.max() < cfg.vocab
 
 
-def test_generate_matches_unpacked_policy():
+def test_generate_matches_unpacked_policy(smollm_serve):
     """Packed serving == unpacked serving, token for token."""
     import dataclasses
-    cfg = reduced_config(get_config("smollm2-135m"))
+    cfg, m1, params = smollm_serve
     shape = ShapeSpec("serve", 64, 2, "decode")
-    m1 = build_model(cfg, RUN, shape)
-    params = m1.init(jax.random.PRNGKey(0))
     m2 = build_model(cfg, dataclasses.replace(RUN, layout_policy="unpacked"),
                      shape)
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
@@ -51,6 +56,17 @@ def test_generate_matches_unpacked_policy():
     o1 = Engine(m1, params).generate(batch, 8)
     o2 = Engine(m2, params, prepack=False).generate(batch, 8)
     np.testing.assert_array_equal(o1, o2)
+
+
+def test_continuous_matches_static_batching(smollm_serve):
+    """The compatibility contract: the continuous engine's generate() equals
+    the static-batch loop token for token (same prompts, same budget)."""
+    cfg, m, params = smollm_serve
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                          cfg.vocab)}
+    eng = Engine(m, params)
+    np.testing.assert_array_equal(eng.generate_static(batch, 6),
+                                  Engine(m, params).generate(batch, 6))
 
 
 def test_vlm_generate_with_patch_prefix():

@@ -179,7 +179,7 @@ def test_trainer_crash_resume_bitwise(tmp_path):
 @pytest.mark.slow
 def test_loss_decreases_on_learnable_stream():
     cfg = reduced_config(get_config("smollm2-135m"), layers=2)
-    shape = ShapeSpec("t", 64, 8, "train")
+    shape = ShapeSpec("t", 64, 4, "train")
     run = RunConfig(param_dtype="float32", compute_dtype="float32",
                     remat=False, lr=3e-3, warmup_steps=5)
     model = build_model(cfg, run, shape)
@@ -189,6 +189,7 @@ def test_loss_decreases_on_learnable_stream():
     assert np.mean(hist[-5:]) < np.mean(hist[:5]) - 0.2
 
 
+@pytest.mark.slow
 def test_microbatch_grads_match_full_batch():
     import dataclasses
     from repro.training.optimizer import make_optimizer
