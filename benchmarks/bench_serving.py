@@ -1,5 +1,6 @@
 """Serving throughput: continuous batching vs static batching at mixed
-prompt lengths / token budgets; scalable vs fixed layout policy.
+prompt lengths / token budgets; scalable vs fixed layout policy; lazy page
+allocation vs eager full-lifetime reservation on a long-tail trace.
 
 Workload: N requests with mixed prompt lengths and per-request budgets,
 all available at t=0 (offline throughput).
@@ -19,7 +20,18 @@ Useful tokens are identical in both modes (each request's own budget), so
 throughput ratios are directly comparable.  Each mode runs once untimed
 (compile warmup) and once timed.
 
+The **long-tail section** replays a trace where most requests have short
+output budgets and a tail runs to the context limit, against a KV pool
+sized at 50% of what eager reservation would need to keep every slot busy.
+Eager admission serializes behind the tail's reservations; lazy allocation
+admits by actual prompt size, grows pages per decode step, and preempts
+(by recomputation) when the pool runs dry — same pool, higher mean slot
+occupancy and 1.4-2x the throughput at the default sizes (CPU-host timing
+is noisy; the occupancy gap is the stable signal), with bit-identical
+greedy outputs (asserted against the eager baseline).
+
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py
+Toy:  PYTHONPATH=src python benchmarks/bench_serving.py --smoke
 """
 
 from __future__ import annotations
@@ -31,6 +43,7 @@ import jax
 import numpy as np
 
 from repro.configs import RunConfig, ShapeSpec, get_config, reduced_config
+from repro.core.layout import ceil_div, round_up
 from repro.models.model import build_model
 from repro.serving.engine import Engine
 
@@ -80,6 +93,89 @@ def bench(model, params, reqs, slots, mode) -> tuple[float, int]:
     return time.perf_counter() - t0, useful
 
 
+# ---------------------------------------------------------------------------
+# long-tail trace: lazy allocation vs eager reservation at the same pool size
+# ---------------------------------------------------------------------------
+
+def make_longtail_workload(cfg, n, max_prompt, max_new, max_len, seed=0):
+    """Short prompts; most requests want a short continuation but every 4th
+    runs to the context limit — the output-length distribution where eager
+    full-lifetime reservation idles most of a pool sized for the average
+    (the reservation is all *future* tokens, which lazy allocation defers)."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(2, max(3, max_prompt // 4) + 1))
+        prompt = np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                               (plen,), 0, cfg.vocab))
+        budget = (max_len - plen) if i % 4 == 3 \
+            else int(rng.integers(2, max_new + 1))
+        reqs.append((prompt, budget))
+    return reqs
+
+
+def run_longtail(model, params, reqs, slots, *, eager, num_pages,
+                 page_tokens=16):
+    eng = Engine(model, params, max_slots=slots, eager=eager,
+                 num_pages=num_pages, page_tokens=page_tokens)
+    eng.warmup()       # compile decode + every prefill bucket before timing
+    rids = [eng.add_request(p, n) for p, n in reqs]
+    t0 = time.perf_counter()
+    fin, steps = {}, 0
+    while eng.scheduler.has_work:
+        fin.update((r.rid, r) for r in eng.step())
+        steps += 1
+    dt = time.perf_counter() - t0
+    assert sorted(fin) == sorted(rids), "drain lost requests"
+    outs = [fin[rid].out_tokens for rid in rids]
+    return eng, outs, dt, steps
+
+
+def bench_longtail(model, params, reqs, slots):
+    # page size the engine will actually use (16 rounded up to the layout m_r)
+    pt = round_up(16, model.ctx.layout(model.compute_dtype).m_r)
+    per_req = [ceil_div(p.shape[0] + n - 1, pt) for p, n in reqs]
+    eager_pages = slots * max(per_req)     # eager never page-blocked
+    half = 1 + eager_pages // 2            # +1: trash page
+    total_new = sum(n for _, n in reqs)
+    print(f"[bench_serving] long-tail: {len(reqs)} requests, "
+          f"{total_new} tokens, {slots} slots, page={pt} tok; "
+          f"eager requirement {eager_pages} pages, pool capped at "
+          f"{half - 1} (50%)")
+
+    base_eng, base_out, base_dt, base_steps = run_longtail(
+        model, params, reqs, slots, eager=True, num_pages=1 + eager_pages,
+        page_tokens=pt)
+    rows = [("eager/full", base_eng, base_out, base_dt, base_steps,
+             1 + eager_pages)]
+    for label, eager in (("eager/half", True), ("lazy/half", False)):
+        eng, outs, dt, steps = run_longtail(model, params, reqs, slots,
+                                            eager=eager, num_pages=half,
+                                            page_tokens=pt)
+        rows.append((label, eng, outs, dt, steps, half))
+    for label, eng, outs, dt, steps, pages in rows:
+        s = eng.scheduler
+        # mean slot occupancy: tokens produced per engine step — eager
+        # reservation idles slots behind long-tail page reservations
+        print(f"  {label:<10} {total_new / dt:8.1f} tok/s ({dt:.2f}s)  "
+              f"concurrency={total_new / steps:.2f} avg / "
+              f"{s.peak_running} peak  "
+              f"preemptions={s.num_preemptions}  "
+              f"peak_pages={eng.pool.peak_used}/{pages - 1}")
+        assert outs == base_out, \
+            f"{label}: outputs diverged from the eager baseline"
+        assert eng.pool.num_used == 0, f"{label}: leaked pages"
+    lazy_eng, lazy_steps = rows[2][1], rows[2][4]
+    eager_half_steps = rows[1][4]
+    assert lazy_eng.scheduler.num_preemptions >= 1, \
+        "long-tail trace at 50% pool should force at least one preemption"
+    ratio = eager_half_steps / lazy_steps
+    print(f"  lazy/eager mean concurrency at the same pool = {ratio:.2f}x; "
+          f"outputs token-identical across all three runs")
+    return ratio
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm2-135m")
@@ -89,7 +185,20 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policies", default="scalable,fixed",
+                    help="comma-separated layout policies to sweep")
+    ap.add_argument("--skip-longtail", action="store_true")
+    ap.add_argument("--skip-throughput", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes (2 slots, tiny pool) for CI smoke: "
+                    "surfaces allocator regressions, not perf numbers")
     args = ap.parse_args(argv)
+    if args.smoke:
+        # 8 requests → two long-tail requests overlap on the 2 slots, so
+        # the 50% pool provably forces a preemption even at toy sizes
+        args.requests, args.slots = 8, 2
+        args.max_prompt, args.max_new, args.max_len = 10, 6, 48
+        args.policies = "scalable"
 
     cfg = reduced_config(get_config(args.arch))
     shape = ShapeSpec("serve", args.max_len, args.slots, "decode")
@@ -97,16 +206,23 @@ def main(argv=None):
                          args.seed)
     total_prompt = sum(p.shape[0] for p, _ in reqs)
     total_new = sum(n for _, n in reqs)
+    policies = [p for p in args.policies.split(",") if p]
     print(f"[bench_serving] {cfg.name}: {len(reqs)} requests, "
           f"prompts 2..{args.max_prompt} ({total_prompt} tok), "
           f"budgets 2..{args.max_new} ({total_new} tok), {args.slots} slots")
 
     results = {}
-    for policy in ("scalable", "fixed"):
+    models = {}
+    for policy in policies:
+        if args.skip_throughput and policy != policies[0]:
+            continue        # only policies[0] feeds the long-tail section
         run = RunConfig(layout_policy=policy, param_dtype="float32",
                         compute_dtype="float32", remat=False)
         model = build_model(cfg, run, shape)
         params = model.init(jax.random.PRNGKey(args.seed))
+        models[policy] = (model, params)
+        if args.skip_throughput:
+            continue
         for mode in ("static", "continuous"):
             dt, useful = bench(model, params, reqs, args.slots, mode)
             assert useful == total_new, (useful, total_new)
@@ -114,12 +230,24 @@ def main(argv=None):
             print(f"  {policy:>8} / {mode:<10} {total_new / dt:8.1f} tok/s "
                   f"({dt:.2f}s)")
 
-    for policy in ("scalable", "fixed"):
-        ratio = results[(policy, "continuous")] / results[(policy, "static")]
-        tag = "OK (>= 1.3x)" if ratio >= 1.3 else "BELOW 1.3x TARGET"
-        print(f"  {policy:>8}: continuous/static = {ratio:.2f}x  [{tag}]")
-    ps = results[("scalable", "continuous")] / results[("fixed", "continuous")]
-    print(f"  continuous: scalable/fixed = {ps:.2f}x")
+    if not args.skip_throughput:
+        for policy in policies:
+            ratio = results[(policy, "continuous")] / results[(policy, "static")]
+            tag = "OK (>= 1.3x)" if ratio >= 1.3 else "BELOW 1.3x TARGET"
+            print(f"  {policy:>8}: continuous/static = {ratio:.2f}x  [{tag}]")
+        if "scalable" in policies and "fixed" in policies:
+            ps = (results[("scalable", "continuous")]
+                  / results[("fixed", "continuous")])
+            print(f"  continuous: scalable/fixed = {ps:.2f}x")
+
+    if not args.skip_longtail:
+        model, params = models[policies[0]]
+        # 2x the request count: the admission gap needs a sustained stream
+        # of short requests contending with the long tail, not a drain-down
+        lt = make_longtail_workload(cfg, 2 * args.requests, args.max_prompt,
+                                    args.max_new, args.max_len, args.seed)
+        results["longtail_concurrency_ratio"] = bench_longtail(
+            model, params, lt, args.slots)
     return results
 
 

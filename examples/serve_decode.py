@@ -3,8 +3,11 @@ with pre-packed weights (the paper's amortized standalone packing, §4.1).
 
 Requests with mixed prompt lengths and budgets arrive over time; the engine
 admits each into a free decode slot as soon as one opens (no lock-step
-batch), allocates KV pages tile-aligned to the active packed layout, and
-retires each request the step it completes.
+batch), allocates KV pages *lazily* as sequences grow (tile-aligned to the
+active packed layout), and retires each request the step it completes.  With
+``--pool-pages`` set below the working set, the scheduler preempts the
+youngest request on exhaustion and transparently recomputes it — outputs
+are unchanged (try it: results are identical either way).
 
 Run:  PYTHONPATH=src python examples/serve_decode.py --arch smollm2-135m
 """
@@ -28,6 +31,9 @@ def main():
     ap.add_argument("--max-prompt", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=48)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="KV pool size in pages (default: ample); small "
+                    "values exercise preemption-by-recomputation")
     ap.add_argument("--sample", action="store_true")
     args = ap.parse_args()
 
@@ -38,7 +44,8 @@ def main():
     model = build_model(cfg, run, shape)
     params = model.init(jax.random.PRNGKey(0))
 
-    engine = Engine(model, params, max_slots=args.slots)  # weights pre-packed
+    engine = Engine(model, params, max_slots=args.slots,  # weights pre-packed
+                    num_pages=args.pool_pages)
     rng = np.random.default_rng(1)
     key = jax.random.PRNGKey(1)
 
@@ -77,9 +84,12 @@ def main():
     dt = time.perf_counter() - t0
 
     total = sum(len(r.out_tokens) for r in finished)
+    st = engine.pool.stats()
     print(f"[serve] {cfg.name}: {len(finished)} ragged requests, "
           f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s on CPU host; "
-          f"page={engine.pool.page_tokens} tok — m_r-aligned)")
+          f"page={st['page_tokens']} tok — m_r-aligned; "
+          f"peak {st['peak_used']}/{st['num_pages'] - 1} pages, "
+          f"{engine.num_preemptions} preemptions)")
     for r in sorted(finished, key=lambda r: r.rid):
         print(f"  rid={r.rid} arrive@{r.arrival:>4.0f} prompt={r.prompt_len:>3} "
               f"-> {len(r.out_tokens):>2} tokens: {r.out_tokens[:10]}")

@@ -2,6 +2,23 @@
 # Tier-1 verification — the ROADMAP command, verbatim.
 # Run from the repo root:  ./scripts/tier1.sh
 # The full (slow-included) sweep:  ./scripts/tier1.sh -m slow
+# With the serving-allocator smoke:  ./scripts/tier1.sh --bench-smoke
+#   (runs bench_serving.py at toy sizes — 2 slots, tiny pool, long-tail
+#   trace at 50% of the eager reservation — so lazy-allocation/preemption
+#   regressions surface without the full benchmark)
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+BENCH_SMOKE=0
+ARGS=()
+for a in "$@"; do
+  if [[ "$a" == "--bench-smoke" ]]; then BENCH_SMOKE=1; else ARGS+=("$a"); fi
+done
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
+
+if [[ "$BENCH_SMOKE" == 1 ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/bench_serving.py --smoke --skip-throughput
+fi

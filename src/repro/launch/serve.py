@@ -35,6 +35,12 @@ def main(argv=None):
     ap.add_argument("--new", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--page-tokens", type=int, default=16)
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="KV pool size in pages (default: ample); undersized "
+                    "pools are served via preemption-by-recomputation")
+    ap.add_argument("--eager", action="store_true",
+                    help="reserve each request's full KV lifetime at "
+                    "admission (the pre-lazy baseline policy)")
     ap.add_argument("--policy", default="scalable")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--static", action="store_true",
@@ -50,7 +56,8 @@ def main(argv=None):
     model = build_model(cfg, run, shape)
     params = model.init(jax.random.PRNGKey(args.seed))
     engine = Engine(model, params, max_slots=args.slots,
-                    page_tokens=args.page_tokens)
+                    page_tokens=args.page_tokens, num_pages=args.pool_pages,
+                    eager=args.eager)
 
     key = jax.random.PRNGKey(args.seed + 1)
     if args.static or not engine.continuous:
@@ -78,7 +85,8 @@ def main(argv=None):
     total = sum(len(r.out_tokens) for r in finished)
     print(f"[serve] {cfg.name}: {len(finished)} requests, {total} tokens "
           f"(paged KV: {engine.pool.page_tokens} tok/page, "
-          f"{engine.pool.num_pages} pages)")
+          f"{engine.pool.num_pages} pages, peak {engine.pool.peak_used} "
+          f"used, {engine.num_preemptions} preemptions)")
     for r in sorted(finished, key=lambda r: r.rid)[:8]:
         print(f"  rid={r.rid} prompt={r.prompt_len:>3} "
               f"new={len(r.out_tokens):>3} [{r.finish_reason}] "

@@ -5,11 +5,21 @@ shape never changes), a paged KV pool (page size = ``round_up(page_tokens,
 m_r)`` of the active packed layout — KV pages are whole microkernel tiles),
 and a FCFS :class:`~repro.serving.scheduler.Scheduler`.  Per engine step:
 
-  1. admission: waiting requests take free slots; each is prefilled at its
-     own (layout-bucketed) length — no cross-request prompt padding;
-  2. decode: every running slot advances one token in a single fixed-shape
-     batched ``paged_decode_step`` (inactive slots write to the trash page);
-  3. eviction: finished requests release slot + pages immediately.
+  1. admission: waiting requests take free slots when the pool has pages
+     for their *prompt* plus a small watermark (lazy allocation — no
+     full-lifetime reservation); each is prefilled at its own
+     (layout-bucketed) length — no cross-request prompt padding;
+  2. growth: every running slot gets a KV page for the position this step's
+     token writes (``Scheduler.grow``); on pool exhaustion the
+     youngest-admitted request is preempted — its pages are released, it is
+     requeued at the front with generated tokens folded into the prompt,
+     and re-admission recomputes the identical continuation;
+  3. decode: every running slot advances one token in a single fixed-shape
+     batched ``paged_decode_step``.  Slots preempted in phase 2 (and free
+     slots) are masked into the trash page mid-step: their rows carry
+     ``new_counts == 0`` and an all-zero block table, so the in-flight step
+     writes their K/V to page 0 and can never corrupt a live request;
+  4. eviction: finished requests release slot + pages immediately.
 
 Rows are mathematically independent (per-row attention over per-row pages,
 per-row softmax/argmax), so a request's greedy output is identical whatever
@@ -49,7 +59,8 @@ _STATIC_FAMILIES = ("encdec", "vlm")
 class Engine:
     def __init__(self, model: ReproModel, params, *, mesh=None,
                  prepack: bool = True, max_slots: Optional[int] = None,
-                 page_tokens: int = 16, num_pages: Optional[int] = None):
+                 page_tokens: int = 16, num_pages: Optional[int] = None,
+                 eager: bool = False, watermark_pages: int = 1):
         self.model = model
         self.mesh = mesh
         self.params = (prepack_params(params, model.ctx)
@@ -74,7 +85,9 @@ class Engine:
             num_pages = 1 + self.slots * ceil_div(max_len, page_tokens)
         self.pool = PagedKVPool(num_pages, page_tokens)
         self.max_pages = ceil_div(max_len, self.pool.page_tokens)
-        self.scheduler = Scheduler(self.slots, self.pool, max_len)
+        self.scheduler = Scheduler(self.slots, self.pool, max_len,
+                                   eager=eager,
+                                   watermark_pages=watermark_pages)
         self.caches = model.init_paged_cache(num_pages, self.pool.page_tokens,
                                              self.slots)
         if mesh is not None:
@@ -99,16 +112,27 @@ class Engine:
                                    eos_id=eos_id, arrival=arrival))
         return rid
 
+    @property
+    def num_preemptions(self) -> int:
+        return self.scheduler.num_preemptions
+
     def step(self, *, now: Optional[float] = None, greedy: bool = True,
              seed: int = 0) -> List[Request]:
-        """One engine step: admit + prefill, then batched decode.  Returns
-        requests finished during this step."""
+        """One engine step: admit + prefill, grow (preempting on pool
+        exhaustion), then batched decode.  Returns requests finished during
+        this step."""
         finished = []
         for req in self.scheduler.admit(now):
             self._prefill_request(req, greedy, seed)
             if req.done():
                 self.scheduler.finish(req)
                 finished.append(req)
+        # growth runs oldest-admission-first, so a just-prefilled arrival is
+        # the preferred preemption victim; a preempted request simply drops
+        # out of `running`, leaving its decode row with new_counts == 0 and
+        # a zero block table — the fixed-shape step masks it into the trash
+        # page mid-step instead of recompiling to a smaller batch
+        self.scheduler.grow()
         running = self.scheduler.running
         if running:
             b, mp = self.slots, self.max_pages
@@ -140,12 +164,61 @@ class Engine:
             finished.extend(self.step(greedy=greedy, seed=seed))
         return finished
 
+    def _prefill_bucket(self, l: int) -> int:
+        """Geometric (power-of-two tile-multiple) prefill bucket for a
+        prompt of ``l`` tokens.  Preemption folds generated tokens into the
+        prompt, so recompute prefills arrive at arbitrary lengths — linear
+        ``round_up(l, m_r)`` bucketing would compile a fresh XLA program
+        per distinct length, unbounded over a server's lifetime.  Geometric
+        buckets cap the compile count at ``log2(max_len / m_r) + 1`` for at
+        most 2x padded prefill compute (padding is masked into the trash
+        page).  Only pure-attention models bucket (``_bucket > 1``):
+        recurrent mixers carry state over *every* prefill token — padding
+        is invisible to the KV mask but not to an ssm/rwkv scan — so hybrid
+        archs prefill at exact length, as before."""
+        if self._bucket == 1:
+            return l
+        b = self._bucket
+        while b < l:
+            b *= 2
+        return min(b, round_up(self.scheduler.max_len, self._bucket))
+
+    def warmup(self) -> None:
+        """Pre-compile every step shape this engine can hit — the batched
+        decode step and each geometric prefill bucket — before taking
+        traffic.  Safe on an idle engine: the warmup calls run with
+        ``new_counts == 0``, which routes every KV write to the trash page,
+        so pool pages and live state are untouched."""
+        assert self.continuous
+        assert not self.scheduler.has_work, "warmup() needs an idle engine"
+        zero = jnp.zeros((1,), jnp.int32)
+        bt1 = jnp.zeros((1, self.max_pages), jnp.int32)
+        if self._bucket > 1:       # hybrids prefill at exact (unbounded)
+            b, seen = self._bucket, set()    # lengths — nothing to pre-compile
+            while True:
+                bucket = self._prefill_bucket(b)
+                if bucket in seen:
+                    break
+                seen.add(bucket)
+                view = prefill_view(self.caches,
+                                    fresh_slot_states(self.caches))
+                _, updated = self._paged_step(
+                    self.params, view, jnp.zeros((1, bucket), jnp.int32), bt1,
+                    zero, zero)
+                self.caches = merge_slot(self.caches, updated, 0)
+                b = bucket + 1
+        zb = jnp.zeros((self.slots,), jnp.int32)
+        _, self.caches = self._paged_step(
+            self.params, self.caches, jnp.zeros((self.slots, 1), jnp.int32),
+            jnp.zeros((self.slots, self.max_pages), jnp.int32), zb, zb)
+
     def _prefill_request(self, req: Request, greedy: bool, seed: int) -> None:
         """Prefill one admitted request at its own length (rounded up to a
-        packed-tile bucket so prompt-length compilations amortize across
-        requests; padded rows are masked into the trash page)."""
+        geometric packed-tile bucket so prompt-length compilations stay
+        bounded and amortize across requests; padded rows are masked into
+        the trash page)."""
         l = req.prompt_len
-        bucket = round_up(l, self._bucket)
+        bucket = self._prefill_bucket(l)
         token = np.zeros((1, bucket), np.int32)
         token[0, :l] = req.prompt
         bt = req.pages.block_row(self.max_pages)[None]
@@ -172,25 +245,49 @@ class Engine:
     # batch API
     # ------------------------------------------------------------------
     def generate(self, batch: dict, max_new: int, *, greedy: bool = True,
-                 seed: int = 0) -> np.ndarray:
+                 seed: int = 0, eos_id: Optional[int] = None,
+                 return_reasons: bool = False):
         """batch: {"tokens": [B, L] prompt, (+frames/patches)}.
 
-        Returns [B, max_new] generated tokens.  Compatibility wrapper: for
-        decoder-only families each row becomes a request served by the
-        continuous engine (results are identical to serving it alone);
-        encdec/vlm use the static path.
+        Returns [B, max_new] generated tokens; rows that hit ``eos_id``
+        before ``max_new`` are padded to the full width with ``eos_id``
+        (rows never produce ragged lengths, so the result always stacks).
+        With ``return_reasons=True`` also returns a length-B list of finish
+        reasons ("eos" | "length").  Compatibility wrapper: for decoder-only
+        families each row becomes a request served by the continuous engine
+        (results are identical to serving it alone); encdec/vlm use the
+        static path, where eos rows are truncated-and-padded post hoc.
         """
         if not self.continuous:
-            return self.generate_static(batch, max_new, greedy=greedy,
-                                        seed=seed)
+            # np.array: the static path hands back a buffer backed by a jax
+            # array, which numpy imports read-only — copy before padding
+            out = np.array(self.generate_static(batch, max_new, greedy=greedy,
+                                                seed=seed))
+            reasons = ["length"] * out.shape[0]
+            if eos_id is not None:
+                for i in range(out.shape[0]):
+                    hits = np.flatnonzero(out[i] == eos_id)
+                    # eos on the final token is "length", matching the
+                    # continuous path (Request.done checks length first)
+                    if hits.size and hits[0] < max_new - 1:
+                        out[i, hits[0]:] = eos_id
+                        reasons[i] = "eos"
+            return (out, reasons) if return_reasons else out
         assert not self.scheduler.has_work, \
             "generate() needs an idle engine; use add_request/step instead"
         prompts = np.asarray(batch["tokens"])
-        rids = [self.add_request(prompts[i], max_new)
+        rids = [self.add_request(prompts[i], max_new, eos_id=eos_id)
                 for i in range(prompts.shape[0])]
         by_rid = {r.rid: r for r in self.drain(greedy=greedy, seed=seed)}
-        return np.stack([np.asarray(by_rid[rid].out_tokens[:max_new])
-                         for rid in rids]).astype(np.int32)
+        pad = 0 if eos_id is None else eos_id
+        rows, reasons = [], []
+        for rid in rids:
+            req = by_rid[rid]
+            toks = req.out_tokens[:max_new]
+            rows.append(toks + [pad] * (max_new - len(toks)))
+            reasons.append(req.finish_reason)
+        out = np.asarray(rows, np.int32)
+        return (out, reasons) if return_reasons else out
 
     def generate_static(self, batch: dict, max_new: int, *,
                         greedy: bool = True, seed: int = 0) -> np.ndarray:

@@ -3,8 +3,17 @@
 The decode KV cache is a pool of fixed-size **pages** shared by all live
 requests; each request owns an ordered list of page ids (its *block table*)
 covering logical positions ``0 .. len-1``.  Admitting a request allocates
-pages, finishing one returns them — sequences of different lengths coexist
-without padding the cache to a common length.
+pages for its *prompt only*; each decode step grows the block table
+incrementally (:meth:`SequencePages.ensure`), and finishing a request
+returns its pages — sequences of different lengths coexist without padding
+the cache to a common length, and pool capacity is consumed by tokens that
+actually exist rather than by reserved lifetimes (the scheduler handles
+exhaustion by preempting, see :mod:`repro.serving.scheduler`).
+
+The allocator tracks the set of live page ids, so a double-free or a free
+of a never-allocated page — either of which would eventually hand one page
+to two requests and silently cross their KV streams — fails loudly at the
+``free`` call instead.
 
 The page size is derived from the active :class:`~repro.core.layout.
 PackedLayout`: ``page_tokens = round_up(requested, m_r)``, so a page always
@@ -60,6 +69,11 @@ class PagedKVPool:
         self.page_tokens = page_tokens
         # LIFO free list → recently-freed (cache-warm) pages are reused first
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._allocated: set = set()
+        # allocator stats (cumulative; peak_used drives pool-sizing decisions)
+        self.total_allocs = 0
+        self.total_frees = 0
+        self.peak_used = 0
 
     @property
     def num_free(self) -> int:
@@ -78,12 +92,27 @@ class PagedKVPool:
     def alloc(self) -> int:
         if not self._free:
             raise OutOfPages("KV pool exhausted")
-        return self._free.pop()
+        p = self._free.pop()
+        self._allocated.add(p)
+        self.total_allocs += 1
+        self.peak_used = max(self.peak_used, self.num_used)
+        return p
 
     def free(self, pages: Iterable[int]) -> None:
         for p in pages:
             assert 0 < p < self.num_pages, p
+            assert p in self._allocated, \
+                f"page {p} freed twice (or never allocated) — a double-free " \
+                f"hands one page to two requests and crosses their KV"
+            self._allocated.remove(p)
             self._free.append(p)
+            self.total_frees += 1
+
+    def stats(self) -> dict:
+        return {"num_pages": self.num_pages, "page_tokens": self.page_tokens,
+                "num_used": self.num_used, "num_free": self.num_free,
+                "peak_used": self.peak_used, "total_allocs": self.total_allocs,
+                "total_frees": self.total_frees}
 
 
 @dataclasses.dataclass

@@ -1,20 +1,50 @@
-"""Continuous-batching scheduler: FCFS admission into fixed decode slots.
+"""Continuous-batching scheduler: FCFS admission into fixed decode slots,
+lazy page allocation, preemption-by-recomputation.
 
 The engine owns a fixed number of decode *slots* (rows of the batched decode
 step — the compiled step shape never changes).  The scheduler:
 
-  - queues incoming requests (FCFS; ``arrival`` lets benchmarks replay a
-    trace),
-  - admits a waiting request when a slot is free AND the KV pool can hold
-    its whole lifetime (prompt + max_new tokens — reservation up front means
-    a running request can never die of pool exhaustion mid-flight;
-    preemption/recompute is future work, see ROADMAP),
+  - queues incoming requests in **arrival order** (``add`` inserts by the
+    request's ``arrival`` stamp, so benchmarks may enqueue a trace out of
+    order without stalling replay behind a not-yet-arrived head; preempted
+    requests always sit at the *front* of the queue, ahead of any arrival),
+  - admits a waiting request when a slot is free AND the pool has pages for
+    its **prompt** plus a small **watermark** of free pages (the watermark is
+    headroom so running requests can grow a few tokens before the next
+    preemption; it is waived when nothing else is running, since then there
+    is nobody left to grow),
   - interleaves prefill and decode: newly-admitted requests are prefilled
     one at a time (each at its own length — no cross-request prompt
     padding), then every running slot advances one token per engine step,
+  - **grows** every running request by one KV position per decode step
+    (:meth:`Scheduler.grow`), allocating pages only as sequences actually
+    lengthen instead of reserving ``prompt + max_new - 1`` up front — a pool
+    sized for average-length outputs serves long-tail traffic instead of
+    idling behind reservations (the paper's amortized-packing economics,
+    §4.1, applied to KV capacity; same philosophy as SVE's one-binary-many-
+    vector-lengths: one pool size, many output-length distributions),
+  - on :class:`~repro.serving.kv_cache.OutOfPages` during growth,
+    **preempts** the youngest-admitted running request: its pages are
+    released, and it re-enters the waiting queue at the front with its
+    already-generated tokens folded into the prompt, so re-admission
+    *recomputes* the interrupted sequence.  Because rows are mathematically
+    independent and prefill logits at the last prompt token equal the decode
+    logits that produced the next token (the batch-independence property
+    proven in tests/test_scheduler.py), recomputation reproduces exactly the
+    same greedy continuation — and the same sampled one, since sampling keys
+    are derived from (seed, rid, position), not from batch composition,
   - evicts finished requests, returning their slot and pages to the free
-    lists immediately; the next waiting request takes the slot at the next
-    step's admission phase.
+    lists immediately.
+
+Termination: the victim is always the *youngest* admitted request, so the
+oldest running request is only ever preempted when it runs alone — and a
+solo request can always finish, because ``add`` asserts every request's
+whole KV lifetime fits the pool by itself.  The oldest request therefore
+always makes progress, and drains terminate even when the pool is far
+smaller than the sum of reservations (see the OutOfPages-under-load test).
+
+``eager=True`` restores the PR-1 policy (reserve the full lifetime at
+admission; growth never fails) — kept as the benchmark baseline.
 """
 
 from __future__ import annotations
@@ -25,7 +55,7 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
-from repro.serving.kv_cache import PagedKVPool, SequencePages
+from repro.serving.kv_cache import OutOfPages, PagedKVPool, SequencePages
 
 __all__ = ["Request", "Scheduler"]
 
@@ -47,6 +77,10 @@ class Request:
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     len: int = 0                  # tokens whose KV is in the cache
     finish_reason: Optional[str] = None
+    admit_seq: int = -1           # admission order; preemption evicts max
+    preempted: bool = False       # waiting at the front for re-admission
+    num_preemptions: int = 0
+    folded: int = 0               # leading out_tokens already in the prompt
 
     @property
     def prompt_len(self) -> int:
@@ -54,9 +88,12 @@ class Request:
 
     @property
     def kv_budget(self) -> int:
-        """KV slots this request can ever occupy: the prompt plus every
-        generated token that is fed back (the final token never is)."""
-        return self.prompt_len + self.max_new - 1
+        """KV slots this request can ever occupy from here: the (possibly
+        recompute-extended) prompt plus every remaining generated token that
+        is fed back (the final token never is).  Invariant under preemption
+        — folding k generated tokens into the prompt grows ``prompt_len`` by
+        k and shrinks the remaining budget by k.  Valid while waiting."""
+        return self.prompt_len + (self.max_new - len(self.out_tokens)) - 1
 
     def done(self) -> bool:
         if len(self.out_tokens) >= self.max_new:
@@ -70,13 +107,19 @@ class Request:
 
 
 class Scheduler:
-    def __init__(self, max_slots: int, pool: PagedKVPool, max_len: int):
+    def __init__(self, max_slots: int, pool: PagedKVPool, max_len: int, *,
+                 eager: bool = False, watermark_pages: int = 1):
         self.max_slots = max_slots
         self.pool = pool
         self.max_len = max_len
+        self.eager = eager
+        self.watermark_pages = watermark_pages
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}          # slot -> request
         self._free_slots: List[int] = list(range(max_slots - 1, -1, -1))
+        self._admit_counter = 0
+        self.num_preemptions = 0
+        self.peak_running = 0
 
     # ------------------------------------------------------------------
     @property
@@ -92,26 +135,103 @@ class Scheduler:
             f"request {req.rid}: KV budget {req.kv_budget} (prompt " \
             f"{req.prompt_len} + max_new {req.max_new} - 1) exceeds " \
             f"engine max_len {self.max_len}"
+        assert self.pool.pages_for(req.kv_budget) <= self.pool.num_pages - 1, \
+            f"request {req.rid}: KV budget {req.kv_budget} can never fit " \
+            f"the pool ({self.pool.num_pages - 1} usable pages of " \
+            f"{self.pool.page_tokens} tokens) — it could neither run eagerly " \
+            f"nor survive preemption"
         req.status = "waiting"
-        self.waiting.append(req)
+        # insert in arrival order (stable: FCFS among equal arrivals), but
+        # never ahead of preempted requests — they resume first regardless
+        i, n = 0, len(self.waiting)
+        while i < n and self.waiting[i].preempted:
+            i += 1
+        while i < n and self.waiting[i].arrival <= req.arrival:
+            i += 1
+        self.waiting.insert(i, req)
 
     def admit(self, now: Optional[float] = None) -> List[Request]:
         """Admit waiting requests (FCFS) while a slot is free and the pool
-        can hold their full KV budget.  Returns the newly-admitted requests;
-        the engine prefills them.  ``now`` gates admission by arrival time
+        has pages for the head's prompt plus the watermark (``eager=True``:
+        for its full KV budget).  Returns the newly-admitted requests; the
+        engine prefills them.  ``now`` gates admission by arrival time
         (benchmark trace replay)."""
         admitted = []
         while (self.waiting and self._free_slots
                and (now is None or self.waiting[0].arrival <= now)
-               and self.pool.can_fit(self.waiting[0].kv_budget)):
+               and self._pages_available(self.waiting[0])):
             req = self.waiting.popleft()
             req.slot = self._free_slots.pop()
             req.status = "running"
+            req.preempted = False
+            req.admit_seq = self._admit_counter
+            self._admit_counter += 1
             req.pages = SequencePages(self.pool)
-            req.pages.ensure(req.kv_budget)   # reserve the whole lifetime
+            # eager: reserve the whole lifetime; lazy: the prompt only —
+            # decode steps grow the block table via grow()
+            req.pages.ensure(req.kv_budget if self.eager else req.prompt_len)
             self.running[req.slot] = req
             admitted.append(req)
+        self.peak_running = max(self.peak_running, len(self.running))
         return admitted
+
+    def _pages_available(self, req: Request) -> bool:
+        if self.eager:
+            return self.pool.can_fit(req.kv_budget)
+        # the watermark keeps headroom for already-running requests to grow;
+        # with nothing running there is nobody to protect, so a solo request
+        # may take the whole pool (this is what guarantees drain progress)
+        reserve = self.watermark_pages if self.running else 0
+        return self.pool.pages_for(req.prompt_len) + reserve \
+            <= self.pool.num_free
+
+    def grow(self) -> List[Request]:
+        """Give every running request a KV slot for the position its next
+        decode token writes (``len``), oldest admission first.  On pool
+        exhaustion, preempt the youngest-admitted running request and retry;
+        returns the requests preempted this step (the engine masks their
+        slots into the trash page for the in-flight decode).  No-op when
+        admission was eager — capacity was reserved up front."""
+        preempted: List[Request] = []
+        for req in sorted(self.running.values(), key=lambda r: r.admit_seq):
+            while req.status == "running":
+                try:
+                    req.pages.ensure(req.len + 1)
+                    break
+                except OutOfPages:
+                    victim = max(self.running.values(),
+                                 key=lambda r: r.admit_seq)
+                    self._preempt(victim)
+                    preempted.append(victim)
+        return preempted
+
+    def _preempt(self, req: Request) -> None:
+        """Release everything and requeue at the front for recomputation:
+        the generated-so-far tokens are folded into the prompt, so the
+        re-admission prefill recomputes the KV the release threw away and
+        the next pick continues the sequence exactly where it stopped."""
+        assert self.running.get(req.slot) is req
+        del self.running[req.slot]
+        req.pages.release()
+        req.pages = None
+        self._free_slots.append(req.slot)
+        req.slot = -1
+        req.len = 0
+        # fold only the tokens generated since the last admission — earlier
+        # preemptions already folded their prefix (re-folding would duplicate
+        # it and silently corrupt the recompute context)
+        fresh = req.out_tokens[req.folded:]
+        if fresh:
+            req.prompt = np.concatenate(
+                [req.prompt, np.asarray(fresh, np.int32)])
+            req.folded = len(req.out_tokens)
+        req.status = "waiting"
+        req.preempted = True
+        req.num_preemptions += 1
+        self.num_preemptions += 1
+        # victims are preempted youngest-first, so successive appendlefts
+        # leave the *oldest* victim at the head for re-admission
+        self.waiting.appendleft(req)
 
     def finish(self, req: Request) -> None:
         """Evict: return the slot and the pages to the free lists."""

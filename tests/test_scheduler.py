@@ -2,12 +2,18 @@
 
 Covers the serving subsystem's contracts:
   - page size is always a multiple of the active layout's ``m_r``;
-  - page allocation/free is balanced after eviction (no leaks);
+  - page allocation/free is balanced after eviction (no leaks), and
+    double-frees / frees of never-allocated pages fail loudly;
   - ragged arrivals produce identical per-request tokens as serving each
     request alone;
   - greedy decode is deterministic under reordered admission;
   - admission waits (FCFS) when slots or pages are exhausted and resumes
-    after eviction.
+    after eviction; out-of-order adds are inserted in arrival order;
+  - lazy admission reserves prompt-only pages; growth preempts the
+    youngest on exhaustion, and the preempted-and-recomputed output equals
+    the uninterrupted one token for token;
+  - a drain under sustained OutOfPages pressure terminates with every
+    request complete and the pool balanced.
 """
 
 import jax
@@ -98,17 +104,41 @@ def test_engine_page_size_multiple_of_m_r(smollm):
     assert eng.pool.page_tokens % lay.m_r == 0
 
 
+def test_double_free_and_foreign_free_detected():
+    """A page freed twice would be handed to two requests and silently
+    cross their KV streams — the allocator must refuse at the free."""
+    pool = PagedKVPool(4, 8)
+    p = pool.alloc()
+    pool.free([p])
+    with pytest.raises(AssertionError):
+        pool.free([p])                       # double-free
+    with pytest.raises(AssertionError):
+        pool.free([3])                       # never allocated
+    with pytest.raises(AssertionError):
+        pool.free([0])                       # the trash page is never owned
+    # a request's rollback path (ensure failure) must not double-free either
+    seq = SequencePages(pool)
+    seq.ensure(3 * 8)
+    with pytest.raises(OutOfPages):
+        SequencePages(pool).ensure(8)
+    seq.release()
+    assert pool.num_free == 3 and pool.total_allocs == pool.total_frees
+
+
 # ---------------------------------------------------------------------------
 # scheduler admission / eviction
 # ---------------------------------------------------------------------------
 
-def test_admission_waits_for_slots_and_pages():
-    pool = PagedKVPool(1 + 6, 8)
-    sched = Scheduler(max_slots=2, pool=pool, max_len=48)
+def _req(rid, plen, max_new, arrival=0.0):
+    return Request(rid=rid, prompt=np.zeros(plen, np.int32),
+                   max_new=max_new, arrival=arrival)
 
-    def req(rid, plen, max_new):
-        return Request(rid=rid, prompt=np.zeros(plen, np.int32),
-                       max_new=max_new)
+
+def test_admission_waits_for_slots_and_pages():
+    """Eager (PR-1 baseline) policy: full-lifetime reservation at admit."""
+    pool = PagedKVPool(1 + 6, 8)
+    sched = Scheduler(max_slots=2, pool=pool, max_len=48, eager=True)
+    req = _req
 
     for r in (req(0, 8, 9), req(1, 8, 9), req(2, 8, 9)):
         sched.add(r)
@@ -135,6 +165,109 @@ def test_request_budget_checked_against_max_len():
     sched = Scheduler(max_slots=2, pool=pool, max_len=16)
     with pytest.raises(AssertionError):
         sched.add(Request(rid=0, prompt=np.zeros(10, np.int32), max_new=10))
+
+
+def test_request_budget_checked_against_pool_capacity():
+    """A request whose lifetime can never fit the pool even alone would
+    deadlock the preemption loop — add() must reject it."""
+    pool = PagedKVPool(1 + 2, 8)                 # 2 usable pages = 16 tokens
+    sched = Scheduler(max_slots=2, pool=pool, max_len=48)
+    with pytest.raises(AssertionError):
+        sched.add(_req(0, 8, 17))                # budget 24 > 16
+    sched.add(_req(1, 8, 9))                     # budget 16 fits exactly
+
+
+def test_add_inserts_in_arrival_order():
+    """Out-of-order adds must not stall trace replay behind a
+    not-yet-arrived head; preempted requests stay at the front."""
+    pool = PagedKVPool(1 + 8, 8)
+    sched = Scheduler(max_slots=1, pool=pool, max_len=48)
+    sched.add(_req(0, 4, 4, arrival=10.0))
+    sched.add(_req(1, 4, 4, arrival=1.0))        # added late, arrives early
+    sched.add(_req(2, 4, 4, arrival=5.0))
+    assert [r.rid for r in sched.waiting] == [1, 2, 0]
+    assert [r.rid for r in sched.admit(now=1.0)] == [1]  # head not rid 0
+    # a preempted request outranks every arrival, however early
+    sched.waiting[0].preempted = True            # rid 2 pretends preempted
+    sched.add(_req(3, 4, 4, arrival=0.0))
+    assert [r.rid for r in sched.waiting] == [2, 3, 0]
+
+
+def test_lazy_admission_reserves_prompt_only():
+    """Lazy admission books pages for the prompt, not the lifetime: two
+    long-budget requests coexist where eager reservation admits one."""
+    pool = PagedKVPool(1 + 4, 8)                 # 4 usable pages
+    sched = Scheduler(max_slots=2, pool=pool, max_len=48)
+    for r in (_req(0, 8, 17), _req(1, 8, 17)):   # eager: 3 pages each
+        sched.add(r)
+    admitted = sched.admit()
+    assert [r.rid for r in admitted] == [0, 1]
+    assert pool.num_used == 2                    # one prompt page each
+
+    eager_pool = PagedKVPool(1 + 4, 8)
+    eager = Scheduler(max_slots=2, pool=eager_pool, max_len=48, eager=True)
+    for r in (_req(0, 8, 17), _req(1, 8, 17)):
+        eager.add(r)
+    assert [r.rid for r in eager.admit()] == [0]  # 3 + 3 pages don't fit
+
+
+def test_growth_preempts_youngest_and_recomputation_state():
+    pool = PagedKVPool(1 + 4, 8)
+    sched = Scheduler(max_slots=2, pool=pool, max_len=48)
+    r0, r1 = _req(0, 8, 17), _req(1, 8, 17)
+    sched.add(r0)
+    sched.add(r1)
+    assert len(sched.admit()) == 2
+
+    # simulate the engine: prefill done, decode steps grow one token each
+    for r in (r0, r1):
+        r.len = r.prompt_len
+        r.out_tokens.append(100 + r.rid)
+    assert sched.grow() == []                    # len 9 fits page 2
+    assert pool.num_used == 4
+    for r in (r0, r1):
+        r.len = 16
+        r.out_tokens.extend([200 + r.rid, 300 + r.rid])
+    preempted = sched.grow()                     # r0 needs page 3; pool dry
+    assert preempted == [r1]                     # youngest admit_seq evicted
+    assert sched.num_preemptions == 1 and r1.num_preemptions == 1
+    assert r1.status == "waiting" and r1.preempted and r1.slot == -1
+    assert r1.len == 0 and r1.pages is None
+    # generated tokens folded into the prompt → recomputation replays them
+    assert r1.prompt.tolist() == [0] * 8 + [101, 201, 301]
+    assert r1.kv_budget == 8 + 17 - 1            # invariant under preemption
+    assert sched.waiting[0] is r1                # front of the queue
+    assert pool.num_used == 3                    # r0 grew into freed pages
+
+    # r1 cannot re-admit while r0 holds the pool under the watermark...
+    assert sched.admit() == []
+    # ...but once r0 finishes, r1 resumes first
+    sched.finish(r0)
+    assert [r.rid for r in sched.admit()] == [1]
+    assert not r1.preempted and r1.admit_seq == 2
+    sched.finish(r1)
+    assert pool.num_used == 0 and sched.num_free_slots == 2
+
+
+def test_second_preemption_folds_only_fresh_tokens():
+    """A twice-preempted request must fold only the tokens generated since
+    its last admission — re-folding the whole out_tokens would duplicate
+    the first fold's prefix and corrupt the recompute context."""
+    pool = PagedKVPool(1 + 8, 8)
+    sched = Scheduler(max_slots=1, pool=pool, max_len=48)
+    r = _req(0, 4, 10)
+    sched.add(r)
+    [r_] = sched.admit()
+    assert r_ is r
+    r.len, r.out_tokens = 4, [11, 12, 13]
+    sched._preempt(r)
+    assert r.prompt.tolist() == [0, 0, 0, 0, 11, 12, 13] and r.folded == 3
+    [r_] = sched.admit()                      # recompute: prefill + decodes
+    r.len, r.out_tokens = 7, [11, 12, 13, 14, 15]
+    sched._preempt(r)
+    assert r.prompt.tolist() == [0, 0, 0, 0, 11, 12, 13, 14, 15]
+    assert r.folded == 5
+    assert r.kv_budget == 4 + 10 - 1          # invariant across both folds
 
 
 # ---------------------------------------------------------------------------
@@ -200,3 +333,65 @@ def test_eos_finishes_early(smollm):
     assert got.out_tokens == want[:3]
     assert got.finish_reason == "eos"
     assert eng.pool.num_used == 0
+
+
+# ---------------------------------------------------------------------------
+# lazy allocation + preemption through the engine
+# ---------------------------------------------------------------------------
+
+def test_preemption_recomputation_is_deterministic(smollm):
+    """The tentpole contract: a pool too small for both lifetimes forces a
+    preemption mid-decode, and the preempted-and-recomputed greedy output
+    equals the uninterrupted (ample-pool) output token for token."""
+    cfg, m, params = smollm
+    prompts = _prompts(cfg, [6, 5])
+    news = [12, 12]
+
+    ample = Engine(m, params, max_slots=2, page_tokens=8)
+    rids = [ample.add_request(p, n) for p, n in zip(prompts, news)]
+    want = {r.rid: r.out_tokens for r in ample.drain()}
+    assert ample.num_preemptions == 0
+
+    # 4 usable pages of 8 tokens; each request's lifetime needs 3 pages
+    tight = Engine(m, params, max_slots=2, page_tokens=8, num_pages=1 + 4)
+    tight.warmup()          # pre-compiles every bucket; must not touch pages
+    assert tight.pool.num_used == 0 and tight.pool.total_allocs == 0
+    rids2 = [tight.add_request(p, n) for p, n in zip(prompts, news)]
+    fin = {r.rid: r for r in tight.drain()}
+    assert tight.num_preemptions >= 1
+    for rid, rid2 in zip(rids, rids2):
+        assert fin[rid2].out_tokens == want[rid]
+        assert fin[rid2].finish_reason == "length"
+    assert tight.pool.num_used == 0
+    assert tight.pool.total_allocs == tight.pool.total_frees
+    assert tight.scheduler.num_free_slots == 2
+
+
+def test_out_of_pages_drain_terminates(smollm):
+    """Sustained OutOfPages pressure: 8 requests whose lifetimes need 4
+    pages each contend for 6 pages across 3 slots.  The drain must
+    terminate (oldest-first growth guarantees progress), complete every
+    request at full budget with outputs identical to an uninterrupted run
+    — including requests preempted more than once (the double-fold
+    regression) — and balance the pool."""
+    cfg, m, params = smollm
+    prompts = _prompts(cfg, [4, 5, 6, 7, 4, 5, 6, 7], seed=3)
+    ample = Engine(m, params, max_slots=3, page_tokens=8)
+    rids_a = [ample.add_request(p, 24) for p in prompts]
+    want = {r.rid: r.out_tokens for r in ample.drain()}
+
+    eng = Engine(m, params, max_slots=3, page_tokens=8, num_pages=1 + 6)
+    rids = [eng.add_request(p, 24) for p in prompts]
+    fin = {r.rid: r for r in eng.drain()}
+    assert sorted(fin) == sorted(rids)
+    for rid, rid_a in zip(rids, rids_a):
+        assert len(fin[rid].out_tokens) == 24
+        assert fin[rid].out_tokens == want[rid_a]
+        assert fin[rid].finish_reason == "length"
+    assert eng.num_preemptions >= 1
+    # at least one request must survive two preemptions, or this test
+    # cannot catch re-fold corruption
+    assert max(r.num_preemptions for r in fin.values()) >= 2
+    assert eng.pool.num_used == 0
+    assert eng.pool.total_allocs == eng.pool.total_frees
+    assert eng.pool.peak_used <= 6

@@ -69,6 +69,33 @@ def test_continuous_matches_static_batching(smollm_serve):
                                   Engine(m, params).generate(batch, 6))
 
 
+def test_generate_pads_eos_rows_and_reports_reasons(smollm_serve):
+    """The ragged-stack bug: a row finishing early (eos) used to crash
+    np.stack.  generate(eos_id=...) must pad eos rows to max_new with the
+    eos token and report per-row finish reasons."""
+    cfg, m, params = smollm_serve
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                          cfg.vocab)}
+    base = Engine(m, params).generate(batch, 8)
+    eos = int(base[0, 2])       # force row 0 to finish at its 3rd token
+    out, reasons = Engine(m, params).generate(batch, 8, eos_id=eos,
+                                              return_reasons=True)
+    assert out.shape == (2, 8) and out.dtype == np.int32
+    for i in range(2):
+        hits = np.flatnonzero(base[i] == eos)
+        want = np.array(base[i])
+        if hits.size:
+            want[hits[0]:] = eos
+            assert reasons[i] == "eos"
+        else:
+            assert reasons[i] == "length"
+        np.testing.assert_array_equal(out[i], want)
+    assert reasons[0] == "eos"
+    # without return_reasons the wrapper keeps its array-only signature
+    out2 = Engine(m, params).generate(batch, 8, eos_id=eos)
+    np.testing.assert_array_equal(out2, out)
+
+
 def test_vlm_generate_with_patch_prefix():
     cfg, m, params = _setup("internvl2-26b")
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
