@@ -7,9 +7,15 @@ batch), allocates KV pages *lazily* as sequences grow (tile-aligned to the
 active packed layout), and retires each request the step it completes.  With
 ``--pool-pages`` set below the working set, the scheduler preempts the
 youngest request on exhaustion and transparently recomputes it — outputs
-are unchanged (try it: results are identical either way).
+are unchanged (try it: results are identical either way).  With
+``--chunk-tokens`` (pure-attention models), prefill fuses into the decode
+step under a per-step token budget: long admissions are spread across
+steps instead of stalling running decodes, again without changing a single
+token.  ``Engine.stats()`` counters (step wall time, slot occupancy,
+prefill stalls, chunks per prompt, compile counts) are printed at the end.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py --arch smollm2-135m
+Fused:                     ... serve_decode.py --chunk-tokens 16
 """
 
 import argparse
@@ -34,6 +40,10 @@ def main():
     ap.add_argument("--pool-pages", type=int, default=None,
                     help="KV pool size in pages (default: ample); small "
                     "values exercise preemption-by-recomputation")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="fuse prefill into the decode step in chunks of "
+                    "this many tokens (pure-attention models; rounded up "
+                    "to the layout m_r)")
     ap.add_argument("--sample", action="store_true")
     args = ap.parse_args()
 
@@ -45,7 +55,8 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
 
     engine = Engine(model, params, max_slots=args.slots,  # weights pre-packed
-                    num_pages=args.pool_pages)
+                    num_pages=args.pool_pages,
+                    chunk_tokens=args.chunk_tokens)
     rng = np.random.default_rng(1)
     key = jax.random.PRNGKey(1)
 
@@ -85,11 +96,21 @@ def main():
 
     total = sum(len(r.out_tokens) for r in finished)
     st = engine.pool.stats()
-    print(f"[serve] {cfg.name}: {len(finished)} ragged requests, "
+    es = engine.stats()
+    mode = (f"fused chunk={engine.chunk_tokens}" if engine.chunked
+            else "monolithic prefill")
+    print(f"[serve] {cfg.name}: {len(finished)} ragged requests ({mode}), "
           f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s on CPU host; "
           f"page={st['page_tokens']} tok — m_r-aligned; "
           f"peak {st['peak_used']}/{st['num_pages'] - 1} pages, "
-          f"{engine.num_preemptions} preemptions)")
+          f"{engine.num_preemptions} preemptions, "
+          f"{engine.num_pauses} prefill pauses)")
+    print(f"[serve] stats: {es['steps']} steps @ {es['mean_step_ms']:.2f} ms, "
+          f"occupancy {es['mean_slot_occupancy']:.2f}, "
+          f"{es['mixed_steps']} mixed steps, "
+          f"{es['prefill_stall_steps']} prefill-stall steps, "
+          f"{es['chunks_per_prompt']:.2f} chunks/prompt, "
+          f"compiles {es['compiles']}")
     for r in sorted(finished, key=lambda r: r.rid):
         print(f"  rid={r.rid} arrive@{r.arrival:>4.0f} prompt={r.prompt_len:>3} "
               f"-> {len(r.out_tokens):>2} tokens: {r.out_tokens[:10]}")

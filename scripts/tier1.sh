@@ -4,8 +4,9 @@
 # The full (slow-included) sweep:  ./scripts/tier1.sh -m slow
 # With the serving-allocator smoke:  ./scripts/tier1.sh --bench-smoke
 #   (runs bench_serving.py at toy sizes — 2 slots, tiny pool, long-tail
-#   trace at 50% of the eager reservation — so lazy-allocation/preemption
-#   regressions surface without the full benchmark)
+#   trace at 50% of the eager reservation, plus the chunked-vs-monolithic
+#   prefill A/B — lazy-allocation/preemption regressions and any
+#   chunked-prefill output mismatch fail the run without the full bench)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

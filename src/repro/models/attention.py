@@ -71,9 +71,19 @@ def paged_kv_update(cache: dict, k: Array, v: Array, *, block_tables: Array,
     k, v: [B, S, Hkv, dh] new keys/values; row b's token s sits at logical
     position ``lens[b] + s`` and is valid iff ``s < new_counts[b]`` (prefill
     rows are padded up to a layout-aligned bucket; invalid writes go to the
-    trash page).
+    trash page).  Rows are fully ragged: one fused step may mix decode rows
+    (``new_counts == 1``), chunked-prefill rows (a ``chunk``-token slice of
+    a prompt at ``lens[b] = cursor``), and inert rows (``new_counts == 0``)
+    — the engine's single fixed-shape step under a token budget, and the
+    verify-step shape for speculative decode.
     block_tables: [B, MP] page ids per row, in logical order.
     Returns (new_cache, k_all [B, MP*T, Hkv, dh], v_all, kv_len_mask [B, MP*T]).
+
+    The gathered stream is masked to ``lens + new_counts`` positions, and
+    ``core_attention``'s per-row 2-D ``q_pos`` gives causality *within* the
+    freshly-written chunk against the paged past — query ``lens[b]+s``
+    sees kv positions ``<= lens[b]+s`` only, so chunked prefill logits are
+    bitwise those of a monolithic prefill at the same positions.
     """
     kp, vp = cache["k_pages"], cache["v_pages"]
     t = kp.shape[1]

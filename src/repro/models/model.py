@@ -181,8 +181,13 @@ class ReproModel:
                           block_tables: Array, lens: Array,
                           new_counts: Array) -> Tuple[Array, dict]:
         """Continuous-batching token step: every row advances from its own
-        position.  ``token``: [B, s] (s=1 decode; s>1 ragged chunked prefill,
-        rows padded past ``new_counts`` are inert).  ``block_tables``:
+        position.  ``token``: [B, s] (s=1 decode; s>1 the fused ragged step
+        — rows mix decoding (1 new token) and chunked prefill (up to s
+        prompt tokens at positions ``lens[b]..``) freely; rows padded past
+        ``new_counts`` are inert).  Causality *within* a row's chunk against
+        its paged past falls out of the per-row 2-D positions; the same
+        ragged multi-position row doubles as the speculative-decode verify
+        step (score k draft tokens in one call).  ``block_tables``:
         [B, MP] page ids; ``lens``: [B] tokens already in cache; ``new_counts``:
         [B] valid new tokens this step (0 = inactive slot).  Returns
         (logits [B, 1, V] — each row's logits at its last valid token,
@@ -210,6 +215,17 @@ class ReproModel:
                                                           self.ctx, self.cfg)
         return caches
 
+    @property
+    def trace_counts(self) -> dict:
+        """Per-kind count of XLA traces (= compilations) of the jitted
+        steps.  The wrapped step function body runs exactly once per
+        (shape, dtype) cache miss, so a Python-side increment there is a
+        compile counter — the hook Engine.warmup's no-recompile-after-warmup
+        contract is regression-tested against."""
+        if not hasattr(self, "_trace_counts"):
+            self._trace_counts = {"decode": 0, "paged": 0}
+        return self._trace_counts
+
     def jit_step(self, kind: str = "decode"):
         """Cached jitted step (donating the cache): shared by every Engine
         built over this model, so serving sessions amortize compilations the
@@ -220,7 +236,13 @@ class ReproModel:
         if kind not in self._jit_cache:
             fn = {"decode": self.decode_step,
                   "paged": self.paged_decode_step}[kind]
-            self._jit_cache[kind] = jax.jit(fn, donate_argnums=(1,))
+            counts = self.trace_counts
+
+            def counted(*args, _fn=fn, _kind=kind, **kwargs):
+                counts[_kind] += 1       # runs at trace time only
+                return _fn(*args, **kwargs)
+
+            self._jit_cache[kind] = jax.jit(counted, donate_argnums=(1,))
         return self._jit_cache[kind]
 
     def decode_step(self, params: dict, caches: dict, token: Array, pos: Array,

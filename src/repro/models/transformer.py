@@ -227,7 +227,15 @@ def layers_apply(params_groups: dict, x: Stream, ctx: MatmulContext,
     for cross-attention) and decode (``caches`` stacked [G, ...]; whisper
     decode additionally passes per-layer precomputed ``cross_kv``; paged
     continuous-batching decode passes ``paged`` block-table state shared by
-    every group).
+    every group).  The paged mode is fully ragged per row — each row's
+    ``positions``/``new_counts`` place anywhere from 0 to S new tokens at
+    its own offset, which is what lets the serving engine fuse chunked
+    prefill and decode into one fixed-shape step (and what a speculative
+    verify step will reuse).  NOTE: only attention layers are inert on
+    padded row positions (their writes land in the trash page and the
+    causal mask hides them); mamba/rwkv scans carry state across every
+    position, so ragged multi-token rows are pure-attention-only — hybrids
+    keep exact-length monolithic prefill.
     """
     period = pattern_period(cfg)
 

@@ -6,20 +6,46 @@ m_r)`` of the active packed layout — KV pages are whole microkernel tiles),
 and a FCFS :class:`~repro.serving.scheduler.Scheduler`.  Per engine step:
 
   1. admission: waiting requests take free slots when the pool has pages
-     for their *prompt* plus a small watermark (lazy allocation — no
-     full-lifetime reservation); each is prefilled at its own
-     (layout-bucketed) length — no cross-request prompt padding;
-  2. growth: every running slot gets a KV page for the position this step's
-     token writes (``Scheduler.grow``); on pool exhaustion the
-     youngest-admitted request is preempted — its pages are released, it is
-     requeued at the front with generated tokens folded into the prompt,
-     and re-admission recomputes the identical continuation;
+     for their *prompt* (chunked: their *next chunk*) plus a small
+     watermark (lazy allocation — no full-lifetime reservation); each is
+     prefilled at its own (layout-bucketed) length — no cross-request
+     prompt padding;
+  2. growth: every decoding slot gets a KV page for the position this
+     step's token writes (``Scheduler.grow``); on pool exhaustion the
+     youngest-admitted request is displaced — a decoding victim is
+     preempted (pages released, generated tokens folded into the prompt,
+     re-admission recomputes the identical continuation), a mid-prefill
+     victim is paused (keeps pages + cursor, resumes instead of redoing
+     written chunks);
   3. decode: every running slot advances one token in a single fixed-shape
-     batched ``paged_decode_step``.  Slots preempted in phase 2 (and free
+     batched ``paged_decode_step``.  Slots displaced in phase 2 (and free
      slots) are masked into the trash page mid-step: their rows carry
      ``new_counts == 0`` and an all-zero block table, so the in-flight step
      writes their K/V to page 0 and can never corrupt a live request;
   4. eviction: finished requests release slot + pages immediately.
+
+With ``chunk_tokens`` set (pure-attention models), prefill and decode fuse
+into a **single ragged step under a per-step token budget**: the batch is
+the fixed shape ``[slots, c]`` whenever any slot is prefilling — ``c``
+drawn from a short geometric ladder ``chunk_tokens, chunk_tokens/2, ..
+m_r`` sized to the step's largest chunk — and ``[slots, 1]`` otherwise
+(``log2(chunk/m_r)+2`` compiled shapes, still below the monolithic
+policy's ``log2`` prompt buckets), and every active row contributes between 1
+token (decoding) and ``chunk_tokens`` (prefilling) via per-row
+``new_counts``/positions — the paper's fixed-shape-grid argument (fix the
+tile grid once, let occupancy vary) applied to the serving step.  A long
+(or recompute-folded, hence unbounded) admission is spread across steps at
+``chunk_tokens`` per step and **never stalls running decodes** — the
+Sarathi-style chunked prefill ROADMAP asks for; inter-token latency during
+an admission is bounded by one fused-step time instead of one full-prompt
+prefill.  Chunk sizes are rounded up to the layout's ``m_r`` so chunk
+writes land on whole microkernel tiles, like the (``m_r``-aligned) pages
+they fill.  The same ragged multi-position row is the verify-step
+primitive speculative decode needs (score k draft tokens in one step).
+Monolithic prefill (``chunk_tokens=None``, the default) and ``eager=True``
+remain the PR-1/2 baseline policies for the benchmark A/B; recurrent-mixer
+families (ssm/rwkv/hybrid) always use them — a scan carries state through
+*every* row position, so padded chunk rows are not inert for them.
 
 Rows are mathematically independent (per-row attention over per-row pages,
 per-row softmax/argmax), so a request's greedy output is identical whatever
@@ -37,6 +63,7 @@ prefill) still use the static-batch path (``generate_static``).
 
 from __future__ import annotations
 
+import time
 from typing import List, Optional
 
 import jax
@@ -60,7 +87,9 @@ class Engine:
     def __init__(self, model: ReproModel, params, *, mesh=None,
                  prepack: bool = True, max_slots: Optional[int] = None,
                  page_tokens: int = 16, num_pages: Optional[int] = None,
-                 eager: bool = False, watermark_pages: int = 1):
+                 eager: bool = False, watermark_pages: int = 1,
+                 chunk_tokens: Optional[int] = None,
+                 token_budget: Optional[int] = None):
         self.model = model
         self.mesh = mesh
         self.params = (prepack_params(params, model.ctx)
@@ -73,21 +102,63 @@ class Engine:
         self.continuous = model.cfg.family not in _STATIC_FAMILIES
         self._next_rid = 0
         if not self.continuous:
+            assert chunk_tokens is None, \
+                f"{model.cfg.family} serves via generate_static; chunked " \
+                f"prefill needs the continuous paged path"
             return
 
         layout = model.ctx.layout(model.compute_dtype)
-        self._bucket = layout.m_r if all(
-            t == "attn" for t in model.cfg.layer_types) else 1
+        all_attn = all(t == "attn" for t in model.cfg.layer_types)
+        self._bucket = layout.m_r if all_attn else 1
         self.slots = max_slots or model.shape.global_batch
         max_len = model.shape.seq_len
         page_tokens = round_up(page_tokens, layout.m_r)
+        if chunk_tokens is not None:
+            assert chunk_tokens >= 1, \
+                f"chunk_tokens={chunk_tokens}: a chunk must carry at least " \
+                f"one token or prefills can never advance"
+            assert all_attn, \
+                f"chunked prefill: {model.cfg.name} mixes recurrent layers " \
+                f"({model.cfg.layer_types}) — an ssm/rwkv scan carries " \
+                f"state through padded chunk rows, so only pure-attention " \
+                f"models fuse prefill chunks into the decode step"
+            # chunk writes land on whole microkernel tiles, like pages
+            chunk_tokens = min(round_up(chunk_tokens, layout.m_r),
+                               round_up(max_len, layout.m_r))
+        self.chunk_tokens = chunk_tokens
+        self.chunked = chunk_tokens is not None
+        # the fused step is dense, so its device cost is set by the SHAPE
+        # (slots x chunk_tokens), not by how many of those positions carry
+        # tokens — the rational default budget is therefore shape-limited
+        # (throttling below it wastes padded compute); pass a smaller
+        # token_budget to bound page-allocation raggedness instead
+        self.token_budget = (token_budget if token_budget is not None
+                             else max(1, self.slots * (chunk_tokens or 1)))
+        assert self.token_budget >= 1
+        if self.chunked:
+            # liveness: when nothing is decoding, the oldest prefill must
+            # be grantable one whole tile (plan_chunks rounds budget-clamped
+            # grants down to the tile, so a sub-tile budget would zero
+            # every grant forever)
+            assert self.token_budget >= layout.m_r, \
+                f"token_budget={self.token_budget} is below one microkernel " \
+                f"tile (m_r={layout.m_r}); chunked prefill could never advance"
         if num_pages is None:
             num_pages = 1 + self.slots * ceil_div(max_len, page_tokens)
         self.pool = PagedKVPool(num_pages, page_tokens)
         self.max_pages = ceil_div(max_len, self.pool.page_tokens)
         self.scheduler = Scheduler(self.slots, self.pool, max_len,
                                    eager=eager,
-                                   watermark_pages=watermark_pages)
+                                   watermark_pages=watermark_pages,
+                                   chunk_tokens=chunk_tokens,
+                                   chunk_align=layout.m_r)
+        # step counters (Engine.stats)
+        self._steps = 0
+        self._step_time = 0.0
+        self._active_rows = 0            # rows with new_counts > 0, summed
+        self._mixed_steps = 0            # steps carrying >= 1 prefill chunk
+        self._finished_count = 0
+        self._chunk_steps_total = 0      # prefill calls/chunks over finished
         self.caches = model.init_paged_cache(num_pages, self.pool.page_tokens,
                                              self.slots)
         if mesh is not None:
@@ -116,11 +187,58 @@ class Engine:
     def num_preemptions(self) -> int:
         return self.scheduler.num_preemptions
 
+    @property
+    def num_pauses(self) -> int:
+        return self.scheduler.num_pauses
+
+    def stats(self) -> dict:
+        """Cumulative serving counters: per-step wall time, mean slot
+        occupancy (active rows / slots, averaged over steps), prefill-stall
+        steps, chunks-per-prompt over finished requests, displacements, XLA
+        trace counts (zero growth after :meth:`warmup` is the no-recompile
+        contract), plus scheduler and pool sub-stats."""
+        assert self.continuous
+        steps = max(1, self._steps)
+        return {
+            "steps": self._steps,
+            "mean_step_ms": 1e3 * self._step_time / steps,
+            "mean_slot_occupancy": self._active_rows / (steps * self.slots),
+            "mixed_steps": self._mixed_steps,
+            "prefill_stall_steps": self.scheduler.prefill_stall_steps,
+            "chunks_per_prompt": (self._chunk_steps_total
+                                  / max(1, self._finished_count)),
+            "finished": self._finished_count,
+            "num_preemptions": self.scheduler.num_preemptions,
+            "num_pauses": self.scheduler.num_pauses,
+            "compiles": dict(self.model.trace_counts),
+            "scheduler": self.scheduler.stats(),
+            "pool": self.pool.stats(),
+        }
+
     def step(self, *, now: Optional[float] = None, greedy: bool = True,
              seed: int = 0) -> List[Request]:
-        """One engine step: admit + prefill, grow (preempting on pool
-        exhaustion), then batched decode.  Returns requests finished during
-        this step."""
+        """One engine step: admit, grow (displacing on pool exhaustion),
+        then one fixed-shape batched model call — monolithic policy: a
+        per-admission prefill plus a ``[slots, 1]`` decode; chunked policy:
+        a single fused ragged ``[slots, chunk_tokens]`` step in which every
+        active row carries 1 (decoding) to ``chunk_tokens`` (prefilling)
+        new positions.  Returns requests finished during this step."""
+        t0 = time.perf_counter()
+        if self.chunked:
+            finished = self._step_chunked(now, greedy, seed)
+        else:
+            finished = self._step_monolithic(now, greedy, seed)
+        # idle ticks (an online replay polling before the next arrival) do
+        # no work and must not dilute the per-step stats
+        if self.scheduler.running or finished:
+            self._steps += 1
+            self._step_time += time.perf_counter() - t0
+        for req in finished:
+            self._finished_count += 1
+            self._chunk_steps_total += req.chunk_steps
+        return finished
+
+    def _step_monolithic(self, now, greedy: bool, seed: int) -> List[Request]:
         finished = []
         for req in self.scheduler.admit(now):
             self._prefill_request(req, greedy, seed)
@@ -145,6 +263,7 @@ class Engine:
                 lens[slot] = req.len
                 counts[slot] = 1
                 bt[slot] = req.pages.block_row(mp)
+            self._active_rows += len(running)
             logits, self.caches = self._paged_step(
                 self.params, self.caches, jnp.asarray(token), jnp.asarray(bt),
                 jnp.asarray(lens), jnp.asarray(counts))
@@ -155,6 +274,84 @@ class Engine:
                 if req.done():
                     self.scheduler.finish(req)
                     finished.append(req)
+        return finished
+
+    def _step_chunked(self, now, greedy: bool, seed: int) -> List[Request]:
+        """The fused ragged step.  Decoding rows carry their fed-back token
+        at position ``len`` (``new_counts == 1``); prefilling rows carry the
+        next ``plan[slot]``-token slice of their prompt at positions
+        ``prefill_cursor ..`` (``new_counts == n``); displaced/stalled/free
+        rows are inert (``new_counts == 0``, zero block table — masked into
+        the trash page).  Causal masking *within* a chunk against the paged
+        past comes from the per-row 2-D positions the paged attention path
+        already implements, so a chunk's logits at its last valid token
+        equal the monolithic prefill's — chunking is invisible in the
+        tokens (asserted by tests and the benchmark A/B)."""
+        sched = self.scheduler
+        finished = []
+        sched.admit(now)
+        # decode growth first: decodes are never stalled behind prefill work
+        # (Sarathi's decode-prioritized schedule); a mid-prefill victim is
+        # paused with its pages, not recomputed
+        sched.grow()
+        running = sched.running
+        if not running:
+            return finished
+        ndecode = sum(1 for r in running.values() if r.status == "running")
+        plan = sched.plan_chunks(self.token_budget - ndecode)
+        use_chunk = any(n > 0 for n in plan.values())
+        b, mp = self.slots, self.max_pages
+        s = self._chunk_shape(max(plan.values(), default=0)) if use_chunk \
+            else 1
+        token = np.zeros((b, s), np.int32)
+        lens = np.zeros((b,), np.int32)
+        counts = np.zeros((b,), np.int32)
+        bt = np.zeros((b, mp), np.int32)
+        for slot, req in running.items():
+            if req.status == "running":
+                token[slot, 0] = req.out_tokens[-1]
+                lens[slot] = req.len
+                counts[slot] = 1
+                bt[slot] = req.pages.block_row(mp)
+            else:
+                n = plan.get(slot, 0)
+                if n == 0:
+                    continue              # stalled this step: inert row
+                cur = req.prefill_cursor
+                token[slot, :n] = req.prompt[cur:cur + n]
+                lens[slot] = cur
+                counts[slot] = n
+                bt[slot] = req.pages.block_row(mp)
+        total_new = int(counts.sum())
+        assert total_new > 0, "running slots but nothing to advance"
+        # decodes are unconditional; only prefill tokens are budget-capped
+        assert total_new <= max(self.token_budget, ndecode)
+        self._active_rows += int((counts > 0).sum())
+        self._mixed_steps += int(use_chunk)
+        logits, self.caches = self._paged_step(
+            self.params, self.caches, jnp.asarray(token), jnp.asarray(bt),
+            jnp.asarray(lens), jnp.asarray(counts))
+        rows = np.asarray(logits[:, 0, :])
+        for slot, req in list(running.items()):
+            if req.status == "running":
+                req.out_tokens.append(self._pick(rows[slot], req, greedy, seed))
+                req.len += 1
+            else:
+                n = plan.get(slot, 0)
+                if n == 0:
+                    continue
+                req.prefill_cursor += n
+                req.len = req.prefill_cursor
+                req.chunk_steps += 1
+                if req.prefill_cursor < req.prompt_len:
+                    continue              # more chunks to come
+                # prefill complete: the logits at the last prompt token are
+                # the first-token distribution, exactly as in monolithic
+                req.status = "running"
+                req.out_tokens.append(self._pick(rows[slot], req, greedy, seed))
+            if req.done():
+                sched.finish(req)
+                finished.append(req)
         return finished
 
     def drain(self, *, greedy: bool = True, seed: int = 0) -> List[Request]:
@@ -183,14 +380,48 @@ class Engine:
             b *= 2
         return min(b, round_up(self.scheduler.max_len, self._bucket))
 
+    def _chunk_shapes(self) -> List[int]:
+        """The fused step's geometric shape ladder: ``chunk_tokens`` halved
+        down to the layout tile (``m_r``), descending.  A step only pays
+        for the largest chunk it actually carries — a final remainder chunk
+        or a short-prompt admission rides a half/quarter-size shape — while
+        the compile count stays ``log2(chunk/m_r)+2`` with the ``[slots,1]``
+        decode shape, still below the monolithic policy's prompt buckets."""
+        shapes = [self.chunk_tokens]
+        while (shapes[-1] % 2 == 0 and shapes[-1] // 2 >= self._bucket
+               and (shapes[-1] // 2) % self._bucket == 0):
+            shapes.append(shapes[-1] // 2)
+        return shapes
+
+    def _chunk_shape(self, n: int) -> int:
+        """Smallest ladder shape holding an ``n``-token chunk."""
+        s = self.chunk_tokens
+        for cand in self._chunk_shapes():
+            if cand >= n:
+                s = cand
+        return s
+
     def warmup(self) -> None:
-        """Pre-compile every step shape this engine can hit — the batched
-        decode step and each geometric prefill bucket — before taking
-        traffic.  Safe on an idle engine: the warmup calls run with
-        ``new_counts == 0``, which routes every KV write to the trash page,
-        so pool pages and live state are untouched."""
+        """Pre-compile every step shape this engine can hit before taking
+        traffic — chunked: the fused ``[slots, c]`` step for every ladder
+        shape ``c`` (``chunk_tokens`` halved down to ``m_r``) plus the
+        ``[slots, 1]`` decode step; monolithic: the
+        decode step plus each geometric prefill bucket.  After warmup a
+        trace with admissions, chunked prefills, growth and preemption
+        triggers zero new XLA compilations (regression-tested via the
+        model's trace counter).  Safe on an idle engine: the warmup calls
+        run with ``new_counts == 0``, which routes every KV write to the
+        trash page, so pool pages and live state are untouched."""
         assert self.continuous
         assert not self.scheduler.has_work, "warmup() needs an idle engine"
+        zb = jnp.zeros((self.slots,), jnp.int32)
+        btb = jnp.zeros((self.slots, self.max_pages), jnp.int32)
+        if self.chunked:
+            for s in self._chunk_shapes() + [1]:
+                _, self.caches = self._paged_step(
+                    self.params, self.caches,
+                    jnp.zeros((self.slots, s), jnp.int32), btb, zb, zb)
+            return
         zero = jnp.zeros((1,), jnp.int32)
         bt1 = jnp.zeros((1, self.max_pages), jnp.int32)
         if self._bucket > 1:       # hybrids prefill at exact (unbounded)
@@ -207,10 +438,9 @@ class Engine:
                     zero, zero)
                 self.caches = merge_slot(self.caches, updated, 0)
                 b = bucket + 1
-        zb = jnp.zeros((self.slots,), jnp.int32)
         _, self.caches = self._paged_step(
             self.params, self.caches, jnp.zeros((self.slots, 1), jnp.int32),
-            jnp.zeros((self.slots, self.max_pages), jnp.int32), zb, zb)
+            btb, zb, zb)
 
     def _prefill_request(self, req: Request, greedy: bool, seed: int) -> None:
         """Prefill one admitted request at its own length (rounded up to a
@@ -228,6 +458,7 @@ class Engine:
             jnp.zeros((1,), jnp.int32), jnp.full((1,), l, jnp.int32))
         self.caches = merge_slot(self.caches, updated, req.slot)
         req.len = l
+        req.chunk_steps += 1        # a monolithic prefill is one big chunk
         req.out_tokens.append(
             self._pick(np.asarray(logits[0, 0, :]), req, greedy, seed))
 

@@ -19,7 +19,12 @@ The page size is derived from the active :class:`~repro.core.layout.
 PackedLayout`: ``page_tokens = round_up(requested, m_r)``, so a page always
 holds a whole number of microkernel M-tiles and decode attention reads
 tiles the mmt4d kernels can consume directly — the paper's amortized
-prepacking argument (§4.1) extended from weights to KV pages.
+prepacking argument (§4.1) extended from weights to KV pages.  Chunked
+prefill (``Engine(chunk_tokens=...)``) keeps the same alignment on the
+write side: chunk sizes are rounded up to ``m_r`` too, so every chunk
+lands as whole tiles and a paused prefill's held pages stay valid KV
+(positions ``0..cursor-1``) across a displacement — only ``release()``
+invalidates them.
 
 Device-side pool arrays live inside the engine's cache pytree
 (``{"k_pages","v_pages"}: [G, P, T, Hkv, dh]``, built by

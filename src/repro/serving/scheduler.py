@@ -13,9 +13,19 @@ step — the compiled step shape never changes).  The scheduler:
     headroom so running requests can grow a few tokens before the next
     preemption; it is waived when nothing else is running, since then there
     is nobody left to grow),
-  - interleaves prefill and decode: newly-admitted requests are prefilled
-    one at a time (each at its own length — no cross-request prompt
-    padding), then every running slot advances one token per engine step,
+  - interleaves prefill and decode.  In the **monolithic** policy (the
+    PR-1/2 baseline) newly-admitted requests are prefilled one at a time
+    (each at its own length — no cross-request prompt padding), then every
+    running slot advances one token per engine step.  In the **chunked**
+    policy (``chunk_tokens`` set) admission books pages for the *first
+    chunk* only and the request enters a ``prefilling`` state: each engine
+    step feeds it the next ``chunk_tokens``-sized slice of its prompt
+    (:meth:`Scheduler.plan_chunks`) inside the same fused batch that
+    advances every decoding slot one token — a long admission is spread
+    across steps and never stalls running decodes (Sarathi-style
+    token-budget scheduling).  The per-request ``prefill_cursor`` tracks
+    how many prompt tokens have KV in the cache; when it reaches the
+    prompt length the request samples its first token and starts decoding,
   - **grows** every running request by one KV position per decode step
     (:meth:`Scheduler.grow`), allocating pages only as sequences actually
     lengthen instead of reserving ``prompt + max_new - 1`` up front — a pool
@@ -36,12 +46,34 @@ step — the compiled step shape never changes).  The scheduler:
   - evicts finished requests, returning their slot and pages to the free
     lists immediately.
 
+A mid-prefill victim is **paused**, not preempted: it keeps its pages (the
+KV for prompt tokens ``0 .. prefill_cursor-1`` stays valid) and its cursor,
+gives up only its slot, and resumes from the cursor on re-admission —
+already-written chunks are never recomputed.  Pausing frees no pages, but
+it stops the victim's chunk-per-step page demand and shrinks the victim
+set, so the preemption loop moves on to decoding victims.  Only as a last
+resort — the sole running request still cannot grow and the remaining
+pages are held by paused waiters — are a paused request's pages
+**reclaimed** (released in full, cursor reset to 0, a true preemption that
+recomputes the partial prefill); this is what keeps drains terminating at
+any pool size.
+
 Termination: the victim is always the *youngest* admitted request, so the
 oldest running request is only ever preempted when it runs alone — and a
 solo request can always finish, because ``add`` asserts every request's
-whole KV lifetime fits the pool by itself.  The oldest request therefore
+whole KV lifetime fits the pool by itself and the reclaim fallback can
+always hand a solo request the entire pool.  The oldest request therefore
 always makes progress, and drains terminate even when the pool is far
 smaller than the sum of reservations (see the OutOfPages-under-load test).
+
+A note on the token budget: the engine's step *shape* is fixed at
+``(slots, chunk_tokens)`` whenever any slot prefills (the paper's
+fixed-shape-grid philosophy: one compiled shape, occupancy varies via
+``new_counts``), so per-step device compute is bounded by the shape, not
+the budget.  ``chunk_tokens`` is therefore the latency knob; the
+``token_budget`` cap on total assigned new tokens additionally bounds how
+many slots prefill concurrently (page-allocation raggedness), and decoding
+slots are never budget-stalled — decode progress is unconditional.
 
 ``eager=True`` restores the PR-1 policy (reserve the full lifetime at
 admission; growth never fails) — kept as the benchmark baseline.
@@ -71,7 +103,7 @@ class Request:
     arrival: float = 0.0
 
     # runtime state (owned by the scheduler/engine)
-    status: str = "waiting"       # waiting | running | finished
+    status: str = "waiting"       # waiting | prefilling | running | finished
     slot: int = -1
     pages: Optional[SequencePages] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
@@ -81,6 +113,12 @@ class Request:
     preempted: bool = False       # waiting at the front for re-admission
     num_preemptions: int = 0
     folded: int = 0               # leading out_tokens already in the prompt
+    # chunked prefill (chunk_tokens set): prompt tokens whose KV is written.
+    # Survives a pause (pages kept) so the prefill resumes, not restarts;
+    # reset to 0 only when pages are actually released (preempt/reclaim).
+    prefill_cursor: int = 0
+    num_pauses: int = 0
+    chunk_steps: int = 0          # prefill steps run (monolithic: per call)
 
     @property
     def prompt_len(self) -> int:
@@ -108,17 +146,22 @@ class Request:
 
 class Scheduler:
     def __init__(self, max_slots: int, pool: PagedKVPool, max_len: int, *,
-                 eager: bool = False, watermark_pages: int = 1):
+                 eager: bool = False, watermark_pages: int = 1,
+                 chunk_tokens: Optional[int] = None, chunk_align: int = 1):
         self.max_slots = max_slots
         self.pool = pool
         self.max_len = max_len
         self.eager = eager
         self.watermark_pages = watermark_pages
+        self.chunk_tokens = chunk_tokens       # None = monolithic prefill
+        self.chunk_align = max(1, chunk_align)  # layout m_r: chunks stay tiles
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}          # slot -> request
         self._free_slots: List[int] = list(range(max_slots - 1, -1, -1))
         self._admit_counter = 0
         self.num_preemptions = 0
+        self.num_pauses = 0
+        self.prefill_stall_steps = 0           # steps where a chunk got < ask
         self.peak_running = 0
 
     # ------------------------------------------------------------------
@@ -153,23 +196,44 @@ class Scheduler:
     def admit(self, now: Optional[float] = None) -> List[Request]:
         """Admit waiting requests (FCFS) while a slot is free and the pool
         has pages for the head's prompt plus the watermark (``eager=True``:
-        for its full KV budget).  Returns the newly-admitted requests; the
-        engine prefills them.  ``now`` gates admission by arrival time
-        (benchmark trace replay)."""
+        for its full KV budget; chunked: for its *next chunk* only — the
+        rest of the prompt is paged in as the cursor advances).  Returns the
+        newly-admitted requests; the engine prefills them (monolithic) or
+        streams them chunk by chunk (``status == "prefilling"``).  ``now``
+        gates admission by arrival time (benchmark trace replay)."""
         admitted = []
         while (self.waiting and self._free_slots
-               and (now is None or self.waiting[0].arrival <= now)
-               and self._pages_available(self.waiting[0])):
+               and (now is None or self.waiting[0].arrival <= now)):
+            if not self._pages_available(self.waiting[0]):
+                # with nothing running, nobody will ever free pages on its
+                # own — reclaim paused waiters (never the head itself, whose
+                # held pages reduce its need) so the head always progresses
+                # and drains terminate at any pool size
+                if not self.running and \
+                        self._reclaim_one_paused(exclude=self.waiting[0]):
+                    continue
+                break
             req = self.waiting.popleft()
             req.slot = self._free_slots.pop()
-            req.status = "running"
             req.preempted = False
             req.admit_seq = self._admit_counter
             self._admit_counter += 1
-            req.pages = SequencePages(self.pool)
-            # eager: reserve the whole lifetime; lazy: the prompt only —
-            # decode steps grow the block table via grow()
-            req.pages.ensure(req.kv_budget if self.eager else req.prompt_len)
+            if req.pages is None:        # a paused request keeps its pages
+                req.pages = SequencePages(self.pool)
+            if self.chunk_tokens is not None:
+                # chunked: pages arrive with each chunk (plan_chunks); a
+                # resumed pause continues from its cursor, never from 0
+                assert req.prefill_cursor < req.prompt_len
+                req.status = "prefilling"
+                req.len = req.prefill_cursor
+                if self.eager:           # eager A/B: lifetime up front
+                    req.pages.ensure(req.kv_budget)
+            else:
+                req.status = "running"
+                # eager: reserve the whole lifetime; lazy: the prompt only —
+                # decode steps grow the block table via grow()
+                req.pages.ensure(req.kv_budget if self.eager
+                                 else req.prompt_len)
             self.running[req.slot] = req
             admitted.append(req)
         self.peak_running = max(self.peak_running, len(self.running))
@@ -182,18 +246,96 @@ class Scheduler:
         # with nothing running there is nobody to protect, so a solo request
         # may take the whole pool (this is what guarantees drain progress)
         reserve = self.watermark_pages if self.running else 0
+        if self.chunk_tokens is not None:
+            held = 0 if req.pages is None else len(req.pages.pages)
+            first = min(req.prefill_cursor + self.chunk_tokens,
+                        req.prompt_len)
+            need = max(0, self.pool.pages_for(first) - held)
+            return need + reserve <= self.pool.num_free
         return self.pool.pages_for(req.prompt_len) + reserve \
             <= self.pool.num_free
 
+    def plan_chunks(self, budget: int) -> Dict[int, int]:
+        """Assign this step's prompt chunk to every PREFILLING slot, oldest
+        admission first: each gets ``min(chunk_tokens, remaining prompt,
+        remaining budget)`` tokens and the pages to hold them.  On
+        ``OutOfPages`` the slot **stalls** (it keeps its slot, cursor and
+        pages, and simply contributes ``new_counts == 0`` this step) rather
+        than stealing pages from decodes — except for the oldest prefill
+        when nothing is decoding, which reclaims paused waiters' pages (and,
+        failing that, pauses younger prefills so the *next* reclaim can take
+        theirs) so the head of the line always makes progress.  Returns
+        ``{slot: n}``."""
+        plan: Dict[int, int] = {}
+        if self.chunk_tokens is None:
+            return plan
+        prefilling = sorted(
+            (r for r in self.running.values() if r.status == "prefilling"),
+            key=lambda r: r.admit_seq)
+        decoding = any(r.status == "running" for r in self.running.values())
+        stalled = False
+        for idx, req in enumerate(prefilling):
+            if req.slot < 0 or req.status != "prefilling":
+                continue                 # paused by an earlier reclaim pass
+            want = min(self.chunk_tokens,
+                       req.prompt_len - req.prefill_cursor)
+            n = min(want, max(0, budget))
+            if n < want:
+                # budget-clamped: keep the cursor on a microkernel-tile
+                # boundary so every later chunk still writes whole tiles
+                # (only the final prompt-remainder chunk may be inexact)
+                n -= n % self.chunk_align
+            if n > 0:
+                try:
+                    req.pages.ensure(req.prefill_cursor + n)
+                except OutOfPages:
+                    if idx == 0 and not decoding:
+                        self._reclaim_for(req, n)
+                    n = min(n, req.pages.capacity - req.prefill_cursor)
+            if n < want:
+                stalled = True
+            plan[req.slot] = n
+            budget -= n
+        if stalled:
+            self.prefill_stall_steps += 1
+        return plan
+
+    def _reclaim_for(self, req: Request, n: int) -> None:
+        """Last-resort page recovery for the oldest prefill when nothing
+        else is running: release paused waiters' pages (youngest admission
+        first), pausing still-running younger prefills so the next reclaim
+        can take theirs.  ``add``'s solo-fit assert guarantees this loop
+        hands ``req`` enough pages eventually."""
+        while True:
+            try:
+                req.pages.ensure(req.prefill_cursor + n)
+                return
+            except OutOfPages:
+                if self._reclaim_one_paused():
+                    continue
+                younger = [r for r in self.running.values()
+                           if r.status == "prefilling" and r is not req]
+                if not younger:
+                    return               # caller falls back to capacity
+                self._pause(max(younger, key=lambda r: r.admit_seq))
+
     def grow(self) -> List[Request]:
-        """Give every running request a KV slot for the position its next
-        decode token writes (``len``), oldest admission first.  On pool
-        exhaustion, preempt the youngest-admitted running request and retry;
-        returns the requests preempted this step (the engine masks their
+        """Give every decoding request a KV slot for the position its next
+        token writes (``len``), oldest admission first (PREFILLING slots get
+        their pages chunk-wise in :meth:`plan_chunks` instead).  On pool
+        exhaustion, displace the youngest-admitted running request and
+        retry: a mid-prefill victim is *paused* (keeps pages + cursor, frees
+        only its slot and its future chunk demand), a decoding victim is
+        *preempted* (pages released, tokens folded, recompute).  When the
+        growing request is its own youngest victim, paused waiters' pages
+        are reclaimed first — self-preemption is the true last resort.
+        Returns the requests displaced this step (the engine masks their
         slots into the trash page for the in-flight decode).  No-op when
         admission was eager — capacity was reserved up front."""
-        preempted: List[Request] = []
+        displaced: List[Request] = []
         for req in sorted(self.running.values(), key=lambda r: r.admit_seq):
+            if req.status != "running":
+                continue
             while req.status == "running":
                 try:
                     req.pages.ensure(req.len + 1)
@@ -201,9 +343,53 @@ class Scheduler:
                 except OutOfPages:
                     victim = max(self.running.values(),
                                  key=lambda r: r.admit_seq)
-                    self._preempt(victim)
-                    preempted.append(victim)
-        return preempted
+                    if victim.status == "prefilling":
+                        # frees no pages, but shrinks the victim set; the
+                        # retry walks on to the next-youngest victim
+                        self._pause(victim)
+                    elif victim is req and self._reclaim_one_paused():
+                        continue
+                    else:
+                        self._preempt(victim)
+                    displaced.append(victim)
+        return displaced
+
+    def _pause(self, req: Request) -> None:
+        """Displace a mid-prefill request *without* losing its work: it
+        keeps its pages (KV for prompt[0:prefill_cursor] stays valid — those
+        pages cannot be handed to anyone else) and its cursor, returns only
+        its slot, and waits at the queue front; re-admission resumes the
+        prefill from the cursor instead of recomputing written chunks."""
+        assert req.status == "prefilling"
+        assert self.running.get(req.slot) is req
+        del self.running[req.slot]
+        self._free_slots.append(req.slot)
+        req.slot = -1
+        req.status = "waiting"
+        req.preempted = True
+        req.num_pauses += 1
+        self.num_pauses += 1
+        self.waiting.appendleft(req)
+
+    def _reclaim_one_paused(self, exclude: Optional[Request] = None) -> bool:
+        """Release the pages of one paused waiting request (youngest
+        admission first), resetting its cursor — a true preemption of a
+        partial prefill, used only when running victims are exhausted.
+        ``exclude`` protects the request the reclaim is *for* (releasing
+        its own pages would grow, not shrink, its need).  Returns False
+        when no other waiter holds pages."""
+        holders = [r for r in self.waiting
+                   if r is not exclude and r.pages is not None
+                   and r.pages.pages]
+        if not holders:
+            return False
+        victim = max(holders, key=lambda r: r.admit_seq)
+        victim.pages.release()
+        victim.prefill_cursor = 0
+        victim.len = 0
+        victim.num_preemptions += 1
+        self.num_preemptions += 1
+        return True
 
     def _preempt(self, req: Request) -> None:
         """Release everything and requeue at the front for recomputation:
@@ -217,6 +403,7 @@ class Scheduler:
         self._free_slots.append(req.slot)
         req.slot = -1
         req.len = 0
+        req.prefill_cursor = 0       # pages gone: re-prefill from the start
         # fold only the tokens generated since the last admission — earlier
         # preemptions already folded their prefix (re-folding would duplicate
         # it and silently corrupt the recompute context)
@@ -241,3 +428,22 @@ class Scheduler:
         self._free_slots.append(req.slot)
         req.slot = -1
         req.status = "finished"
+
+    def stats(self) -> dict:
+        """Scheduler-side counters (cumulative; pool stats live on the
+        pool).  ``prefilling``/``decoding`` split the running set by state;
+        ``prefill_stall_steps`` counts steps where some prefilling slot was
+        assigned fewer chunk tokens than it asked for (pages or budget)."""
+        running = list(self.running.values())
+        return {
+            "waiting": len(self.waiting),
+            "running": len(running),
+            "prefilling": sum(r.status == "prefilling" for r in running),
+            "decoding": sum(r.status == "running" for r in running),
+            "free_slots": len(self._free_slots),
+            "peak_running": self.peak_running,
+            "num_preemptions": self.num_preemptions,
+            "num_pauses": self.num_pauses,
+            "prefill_stall_steps": self.prefill_stall_steps,
+            "chunk_tokens": self.chunk_tokens,
+        }
