@@ -11,11 +11,17 @@ are unchanged (try it: results are identical either way).  With
 ``--chunk-tokens`` (pure-attention models), prefill fuses into the decode
 step under a per-step token budget: long admissions are spread across
 steps instead of stalling running decodes, again without changing a single
-token.  ``Engine.stats()`` counters (step wall time, slot occupancy,
-prefill stalls, chunks per prompt, compile counts) are printed at the end.
+token.  With ``--spec-tokens k``, a prompt-lookup n-gram drafter rides up
+to k guesses per decode row through the same fused step and the engine
+accepts the prefix the target model agrees with — once more without
+changing a single token, greedy or sampled (the acceptance rule replays
+the engine's own deterministic picks).  ``Engine.stats()`` counters (step
+wall time, slot occupancy, prefill stalls, chunks per prompt, acceptance
+rate, draft overhead, compile counts) are printed at the end.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py --arch smollm2-135m
 Fused:                     ... serve_decode.py --chunk-tokens 16
+Speculative:               ... serve_decode.py --spec-tokens 3
 """
 
 import argparse
@@ -44,6 +50,11 @@ def main():
                     help="fuse prefill into the decode step in chunks of "
                     "this many tokens (pure-attention models; rounded up "
                     "to the layout m_r)")
+    ap.add_argument("--spec-tokens", type=int, default=None,
+                    help="speculative decode with an n-gram (prompt-lookup) "
+                    "drafter proposing up to this many tokens per decode "
+                    "row (pure-attention models; outputs are unchanged — "
+                    "accepted drafts only save steps)")
     ap.add_argument("--sample", action="store_true")
     args = ap.parse_args()
 
@@ -56,7 +67,8 @@ def main():
 
     engine = Engine(model, params, max_slots=args.slots,  # weights pre-packed
                     num_pages=args.pool_pages,
-                    chunk_tokens=args.chunk_tokens)
+                    chunk_tokens=args.chunk_tokens,
+                    spec_tokens=args.spec_tokens)
     rng = np.random.default_rng(1)
     key = jax.random.PRNGKey(1)
 
@@ -99,6 +111,8 @@ def main():
     es = engine.stats()
     mode = (f"fused chunk={engine.chunk_tokens}" if engine.chunked
             else "monolithic prefill")
+    if engine.spec_tokens is not None:
+        mode += f" + spec k={engine.spec_tokens}"
     print(f"[serve] {cfg.name}: {len(finished)} ragged requests ({mode}), "
           f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s on CPU host; "
           f"page={st['page_tokens']} tok — m_r-aligned; "
@@ -111,6 +125,15 @@ def main():
           f"{es['prefill_stall_steps']} prefill-stall steps, "
           f"{es['chunks_per_prompt']:.2f} chunks/prompt, "
           f"compiles {es['compiles']}")
+    if "speculative" in es:
+        sp = es["speculative"]
+        print(f"[serve] speculation: accepted {sp['accepted']}/{sp['drafted']} "
+              f"drafts ({sp['acceptance_rate']:.2f}), "
+              f"{sp['decode_tokens_per_row_step']:.2f} decode tokens/row-step, "
+              f"{sp['accepted_per_step']:.2f} accepted/step, "
+              f"draft overhead {sp['draft_overhead']:.2f}, "
+              f"{sp['rollback_pages']} pages rolled back "
+              f"({sp['drafter']})")
     for r in sorted(finished, key=lambda r: r.rid):
         print(f"  rid={r.rid} arrive@{r.arrival:>4.0f} prompt={r.prompt_len:>3} "
               f"-> {len(r.out_tokens):>2} tokens: {r.out_tokens[:10]}")

@@ -4,9 +4,11 @@
 # The full (slow-included) sweep:  ./scripts/tier1.sh -m slow
 # With the serving-allocator smoke:  ./scripts/tier1.sh --bench-smoke
 #   (runs bench_serving.py at toy sizes — 2 slots, tiny pool, long-tail
-#   trace at 50% of the eager reservation, plus the chunked-vs-monolithic
-#   prefill A/B — lazy-allocation/preemption regressions and any
-#   chunked-prefill output mismatch fail the run without the full bench)
+#   trace at 50% of the eager reservation, the chunked-vs-monolithic
+#   prefill A/B, and the speculative-decoding section — lazy-allocation/
+#   preemption regressions and any chunked-vs-monolithic or
+#   spec-vs-baseline output mismatch (greedy or sampled) fail the run
+#   without the full bench)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

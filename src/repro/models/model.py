@@ -179,7 +179,8 @@ class ReproModel:
 
     def paged_decode_step(self, params: dict, caches: dict, token: Array,
                           block_tables: Array, lens: Array,
-                          new_counts: Array) -> Tuple[Array, dict]:
+                          new_counts: Array,
+                          logits_idx: Optional[Array] = None) -> Tuple[Array, dict]:
         """Continuous-batching token step: every row advances from its own
         position.  ``token``: [B, s] (s=1 decode; s>1 the fused ragged step
         — rows mix decoding (1 new token) and chunked prefill (up to s
@@ -189,17 +190,21 @@ class ReproModel:
         ragged multi-position row doubles as the speculative-decode verify
         step (score k draft tokens in one call).  ``block_tables``:
         [B, MP] page ids; ``lens``: [B] tokens already in cache; ``new_counts``:
-        [B] valid new tokens this step (0 = inactive slot).  Returns
-        (logits [B, 1, V] — each row's logits at its last valid token,
-        caches')."""
+        [B] valid new tokens this step (0 = inactive slot).
+        ``logits_idx``: optional [B, K] within-chunk positions to read
+        logits at (the verify step needs every draft position, not just the
+        last — K bounds the head projection at k+1 however wide the fused
+        chunk is); ``None`` reads each row's last valid token.  Returns
+        (logits [B, K, V] (K=1 when ``logits_idx`` is None), caches')."""
         x = embed_apply(params["embed"], token).astype(self.compute_dtype)
         positions = lens[:, None] + jnp.arange(token.shape[1], dtype=jnp.int32)
         paged = {"block_tables": block_tables, "lens": lens,
                  "new_counts": new_counts}
+        logits_at = (jnp.maximum(new_counts - 1, 0) if logits_idx is None
+                     else logits_idx)
         logits, new_caches, _ = tfm.lm_apply(
             params, x, self.ctx, self.cfg, self.run, positions=positions,
-            caches=caches, paged=paged,
-            logits_at=jnp.maximum(new_counts - 1, 0))
+            caches=caches, paged=paged, logits_at=logits_at)
         return logits, new_caches
 
     def prefill_cache(self, params: dict, batch: dict) -> dict:

@@ -315,7 +315,10 @@ def lm_apply(params: dict, embeds: Array, ctx: MatmulContext, cfg: ModelConfig,
     Returns (logits [B,S,V] (or [B,1,V] when ``last_only`` — the serving
     prefill path, which skips the full-sequence vocab projection), caches,
     aux).  ``logits_at``: [B] per-row position — emit logits for that
-    position only (ragged prefill: each row's last *valid* token differs).
+    position only (ragged prefill: each row's last *valid* token differs)
+    — or [B, K] per-row positions, emitting [B, K, V] (the speculative
+    verify step reads logits at each of a row's k draft positions from one
+    fused call while the head still projects K << S positions).
     """
     x: Stream = maybe_pack(embeds, ctx)
     x, new_caches, aux = layers_apply(params["groups"], x, ctx, cfg, run,
@@ -323,8 +326,9 @@ def lm_apply(params: dict, embeds: Array, ctx: MatmulContext, cfg: ModelConfig,
                                       cache_pos=cache_pos, paged=paged)
     x = norm_apply(params["ln_f"], x, cfg.norm)
     if logits_at is not None:
+        idx = logits_at if logits_at.ndim == 2 else logits_at[:, None]
         x = jnp.take_along_axis(maybe_unpack(x),
-                                logits_at[:, None, None].astype(jnp.int32),
+                                idx[:, :, None].astype(jnp.int32),
                                 axis=1)
         x = maybe_pack(x, ctx)
     elif last_only:

@@ -47,6 +47,21 @@ remain the PR-1/2 baseline policies for the benchmark A/B; recurrent-mixer
 families (ssm/rwkv/hybrid) always use them — a scan carries state through
 *every* row position, so padded chunk rows are not inert for them.
 
+With ``spec_tokens=k`` (pure-attention models) the engine decodes
+**speculatively**: a pluggable :class:`~repro.serving.speculative.Drafter`
+proposes up to ``k`` guesses per decoding row, the row feeds
+``[fed-back token, d_1 .. d_k]`` through the same fixed-shape paged step
+(``new_counts`` = 1 + draft length — per-row draft lengths ride the ragged
+step exactly like per-row chunk lengths, zero new traces), ``logits_idx``
+reads the target logits at every draft position from that one call, and
+the acceptance rule in :mod:`repro.serving.speculative` keeps outputs
+token-identical to the non-speculative engine — greedy and sampled — while
+each accepted draft advances a row one extra token per step.  Page growth
+books the ``k+1``-token ask speculatively (shed under pressure, never
+preempted-for); rejected positions are rolled back by truncating the block
+table (:meth:`SequencePages.truncate`), and a preemption can never fold a
+rejected draft because ``out_tokens`` only ever holds accepted tokens.
+
 Rows are mathematically independent (per-row attention over per-row pages,
 per-row softmax/argmax), so a request's greedy output is identical whatever
 else shares the batch — admission order cannot change results.
@@ -77,6 +92,7 @@ from repro.models.model import ReproModel
 from repro.serving.kv_cache import (PagedKVPool, fresh_slot_states,
                                     merge_slot, prefill_view)
 from repro.serving.scheduler import Request, Scheduler
+from repro.serving.speculative import Drafter, NgramDrafter, accept_tokens
 
 __all__ = ["Engine"]
 
@@ -89,7 +105,9 @@ class Engine:
                  page_tokens: int = 16, num_pages: Optional[int] = None,
                  eager: bool = False, watermark_pages: int = 1,
                  chunk_tokens: Optional[int] = None,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 spec_tokens: Optional[int] = None,
+                 drafter: Optional[Drafter] = None):
         self.model = model
         self.mesh = mesh
         self.params = (prepack_params(params, model.ctx)
@@ -105,6 +123,9 @@ class Engine:
             assert chunk_tokens is None, \
                 f"{model.cfg.family} serves via generate_static; chunked " \
                 f"prefill needs the continuous paged path"
+            assert spec_tokens is None and drafter is None, \
+                f"{model.cfg.family} serves via generate_static; " \
+                f"speculative decode needs the continuous paged path"
             return
 
         layout = model.ctx.layout(model.compute_dtype)
@@ -152,6 +173,29 @@ class Engine:
                                    watermark_pages=watermark_pages,
                                    chunk_tokens=chunk_tokens,
                                    chunk_align=layout.m_r)
+        # speculative decode (spec_tokens=k): every decode row may carry
+        # 1 + k positions through the same fused ragged step
+        self.spec_tokens = spec_tokens
+        self.drafter: Optional[Drafter] = None
+        if spec_tokens is not None:
+            assert spec_tokens >= 1, \
+                f"spec_tokens={spec_tokens}: speculation needs at least " \
+                f"one draft position (use spec_tokens=None to disable)"
+            assert all_attn, \
+                f"speculative decode: {model.cfg.name} mixes recurrent " \
+                f"layers ({model.cfg.layer_types}) — a rejected draft's " \
+                f"KV rolls back by page truncation, but an ssm/rwkv scan " \
+                f"state cannot un-absorb rejected positions"
+            if self.chunked:
+                assert self.chunk_tokens >= spec_tokens + 1, \
+                    f"spec_tokens={spec_tokens} needs verify rows of " \
+                    f"{spec_tokens + 1} positions, wider than " \
+                    f"chunk_tokens={self.chunk_tokens} — the fused step's " \
+                    f"shape ladder must cover the verify width"
+            self.drafter = drafter if drafter is not None else NgramDrafter()
+            self.drafter.attach(self)
+        else:
+            assert drafter is None, "a drafter needs spec_tokens set"
         # step counters (Engine.stats)
         self._steps = 0
         self._step_time = 0.0
@@ -159,6 +203,14 @@ class Engine:
         self._mixed_steps = 0            # steps carrying >= 1 prefill chunk
         self._finished_count = 0
         self._chunk_steps_total = 0      # prefill calls/chunks over finished
+        # speculative counters
+        self._draft_time = 0.0           # host wall time inside the drafter
+        self._drafted = 0                # draft tokens actually verified
+        self._accepted = 0               # draft tokens accepted
+        self._decode_tokens = 0          # tokens appended by decode rows
+        self._decode_rows = 0            # decode row-steps (verify calls)
+        self._spec_trims = 0             # draft lists trimmed by page caps
+        self._rollback_pages = 0         # pages freed by rejected-KV truncate
         self.caches = model.init_paged_cache(num_pages, self.pool.page_tokens,
                                              self.slots)
         if mesh is not None:
@@ -172,15 +224,23 @@ class Engine:
     # continuous-batching API
     # ------------------------------------------------------------------
     def add_request(self, tokens, max_new: int, *, eos_id: Optional[int] = None,
-                    arrival: float = 0.0) -> int:
-        """Queue one request.  Returns its request id."""
+                    arrival: float = 0.0, temperature: float = 1.0,
+                    seed: Optional[int] = None) -> int:
+        """Queue one request.  Returns its request id.
+
+        ``temperature``/``seed`` are per-request sampling params (one batch
+        mixes them freely): ``temperature=0`` forces greedy for this
+        request even in a sampled drain; ``seed=None`` inherits the step's
+        seed.  Per-request keys are what make sampled decode reproducible
+        under preemption and speculation alike."""
         assert self.continuous, \
             f"{self.model.cfg.family} serves via generate_static"
         rid = self._next_rid
         self._next_rid += 1
         prompt = np.asarray(tokens, np.int32).reshape(-1)
         self.scheduler.add(Request(rid=rid, prompt=prompt, max_new=max_new,
-                                   eos_id=eos_id, arrival=arrival))
+                                   eos_id=eos_id, arrival=arrival,
+                                   temperature=temperature, seed=seed))
         return rid
 
     @property
@@ -199,7 +259,7 @@ class Engine:
         contract), plus scheduler and pool sub-stats."""
         assert self.continuous
         steps = max(1, self._steps)
-        return {
+        out = {
             "steps": self._steps,
             "mean_step_ms": 1e3 * self._step_time / steps,
             "mean_slot_occupancy": self._active_rows / (steps * self.slots),
@@ -214,6 +274,26 @@ class Engine:
             "scheduler": self.scheduler.stats(),
             "pool": self.pool.stats(),
         }
+        if self.spec_tokens is not None:
+            out["speculative"] = {
+                "spec_tokens": self.spec_tokens,
+                "drafted": self._drafted,
+                "accepted": self._accepted,
+                "acceptance_rate": self._accepted / max(1, self._drafted),
+                "accepted_per_step": self._accepted / steps,
+                # decode tokens per decode-row activation: the speedup a
+                # decode row sees from riding drafts (1.0 = no speculation)
+                "decode_tokens_per_row_step": (self._decode_tokens
+                                               / max(1, self._decode_rows)),
+                "draft_time_ms": 1e3 * self._draft_time,
+                "draft_overhead": (self._draft_time / self._step_time
+                                   if self._step_time > 0 else 0.0),
+                "spec_trims": self._spec_trims,
+                "spec_grow_fallbacks": self.scheduler.spec_grow_fallbacks,
+                "rollback_pages": self._rollback_pages,
+                "drafter": self.drafter.stats(),
+            }
+        return out
 
     def step(self, *, now: Optional[float] = None, greedy: bool = True,
              seed: int = 0) -> List[Request]:
@@ -236,6 +316,8 @@ class Engine:
         for req in finished:
             self._finished_count += 1
             self._chunk_steps_total += req.chunk_steps
+            if self.drafter is not None:
+                self.drafter.forget(req.rid)
         return finished
 
     def _step_monolithic(self, now, greedy: bool, seed: int) -> List[Request]:
@@ -249,31 +331,31 @@ class Engine:
         # the preferred preemption victim; a preempted request simply drops
         # out of `running`, leaving its decode row with new_counts == 0 and
         # a zero block table — the fixed-shape step masks it into the trash
-        # page mid-step instead of recompiling to a smaller batch
-        self.scheduler.grow()
+        # page mid-step instead of recompiling to a smaller batch.  Drafts
+        # are proposed first so growth can book the k+1-token speculative
+        # ask (a preempted row's proposal is simply dropped with the row)
+        drafts = self._draft_and_grow()
         running = self.scheduler.running
         if running:
+            neff = self._grant_drafts(running, drafts)
             b, mp = self.slots, self.max_pages
-            token = np.zeros((b, 1), np.int32)
+            # two compiled decode shapes: [slots, 1] (no drafts anywhere
+            # this step) and the verify shape [slots, spec_tokens+1]
+            spec = max(neff.values()) > 1
+            s = self.spec_tokens + 1 if spec else 1
+            token = np.zeros((b, s), np.int32)
             lens = np.zeros((b,), np.int32)
             counts = np.zeros((b,), np.int32)
             bt = np.zeros((b, mp), np.int32)
+            idx = np.zeros((b, s), np.int32) if spec else None
             for slot, req in running.items():
-                token[slot, 0] = req.out_tokens[-1]
-                lens[slot] = req.len
-                counts[slot] = 1
-                bt[slot] = req.pages.block_row(mp)
+                self._fill_decode_row(slot, req, neff[slot], drafts,
+                                      token, lens, counts, bt, idx)
             self._active_rows += len(running)
-            logits, self.caches = self._paged_step(
-                self.params, self.caches, jnp.asarray(token), jnp.asarray(bt),
-                jnp.asarray(lens), jnp.asarray(counts))
-            rows = np.asarray(logits[:, 0, :])
+            rows = self._run_paged(token, bt, lens, counts, idx)
             for slot, req in list(running.items()):
-                req.out_tokens.append(self._pick(rows[slot], req, greedy, seed))
-                req.len += 1
-                if req.done():
-                    self.scheduler.finish(req)
-                    finished.append(req)
+                self._verify_decode_row(req, drafts.get(slot, []), rows[slot],
+                                        neff[slot], greedy, seed, finished)
         return finished
 
     def _step_chunked(self, now, greedy: bool, seed: int) -> List[Request]:
@@ -292,27 +374,32 @@ class Engine:
         sched.admit(now)
         # decode growth first: decodes are never stalled behind prefill work
         # (Sarathi's decode-prioritized schedule); a mid-prefill victim is
-        # paused with its pages, not recomputed
-        sched.grow()
+        # paused with its pages, not recomputed.  Speculation rides the
+        # same fused step: a decode row's new_counts becomes 1 + its draft
+        # length, pulled from the same shape ladder as prefill chunks
+        drafts = self._draft_and_grow()
         running = sched.running
         if not running:
             return finished
-        ndecode = sum(1 for r in running.values() if r.status == "running")
+        neff = self._grant_drafts(running, drafts)
+        ndecode = sum(neff.values())
         plan = sched.plan_chunks(self.token_budget - ndecode)
         use_chunk = any(n > 0 for n in plan.values())
         b, mp = self.slots, self.max_pages
-        s = self._chunk_shape(max(plan.values(), default=0)) if use_chunk \
-            else 1
+        widest = max(max(plan.values(), default=0),
+                     max(neff.values(), default=0))
+        s = self._chunk_shape(widest) if (use_chunk or widest > 1) else 1
+        spec = any(n > 1 for n in neff.values())
+        k1 = self.spec_tokens + 1 if spec else 1
         token = np.zeros((b, s), np.int32)
         lens = np.zeros((b,), np.int32)
         counts = np.zeros((b,), np.int32)
         bt = np.zeros((b, mp), np.int32)
+        idx = np.zeros((b, k1), np.int32) if spec else None
         for slot, req in running.items():
             if req.status == "running":
-                token[slot, 0] = req.out_tokens[-1]
-                lens[slot] = req.len
-                counts[slot] = 1
-                bt[slot] = req.pages.block_row(mp)
+                self._fill_decode_row(slot, req, neff[slot], drafts,
+                                      token, lens, counts, bt, idx)
             else:
                 n = plan.get(slot, 0)
                 if n == 0:
@@ -322,20 +409,20 @@ class Engine:
                 lens[slot] = cur
                 counts[slot] = n
                 bt[slot] = req.pages.block_row(mp)
+                if spec:
+                    idx[slot] = n - 1     # its last chunk token, read at j=0
         total_new = int(counts.sum())
         assert total_new > 0, "running slots but nothing to advance"
-        # decodes are unconditional; only prefill tokens are budget-capped
+        # decodes (and their drafts) are unconditional; only prefill tokens
+        # are budget-capped
         assert total_new <= max(self.token_budget, ndecode)
         self._active_rows += int((counts > 0).sum())
         self._mixed_steps += int(use_chunk)
-        logits, self.caches = self._paged_step(
-            self.params, self.caches, jnp.asarray(token), jnp.asarray(bt),
-            jnp.asarray(lens), jnp.asarray(counts))
-        rows = np.asarray(logits[:, 0, :])
+        rows = self._run_paged(token, bt, lens, counts, idx)
         for slot, req in list(running.items()):
             if req.status == "running":
-                req.out_tokens.append(self._pick(rows[slot], req, greedy, seed))
-                req.len += 1
+                self._verify_decode_row(req, drafts.get(slot, []), rows[slot],
+                                        neff[slot], greedy, seed, finished)
             else:
                 n = plan.get(slot, 0)
                 if n == 0:
@@ -348,11 +435,118 @@ class Engine:
                 # prefill complete: the logits at the last prompt token are
                 # the first-token distribution, exactly as in monolithic
                 req.status = "running"
-                req.out_tokens.append(self._pick(rows[slot], req, greedy, seed))
-            if req.done():
-                sched.finish(req)
-                finished.append(req)
+                req.out_tokens.append(
+                    self._pick(rows[slot, 0], req, greedy, seed))
+                if req.done():
+                    sched.finish(req)
+                    finished.append(req)
         return finished
+
+    # ------------------------------------------------------------------
+    # speculative decode plumbing (no-ops when spec_tokens is None: every
+    # row proposes nothing, carries n_eff == 1, and the verify loop
+    # degenerates to the baseline one-pick decode)
+    # ------------------------------------------------------------------
+    def _propose_drafts(self) -> dict:
+        """``{slot: [draft tokens]}`` for decoding rows, trimmed so a draft
+        can never outlive ``max_new`` (the final generated token is never
+        fed back, so at most ``max_new - generated - 1`` fed positions
+        remain useful).  Host wall time is accounted as draft overhead."""
+        if self.drafter is None:
+            return {}
+        t0 = time.perf_counter()
+        drafts = {}
+        for slot, req in self.scheduler.running.items():
+            if req.status != "running":
+                continue
+            k = min(self.spec_tokens, req.max_new - len(req.out_tokens) - 1)
+            if k <= 0:
+                continue
+            d = [int(t) for t in self.drafter.propose(req, k)][:k]
+            if d:
+                drafts[slot] = d
+        self._draft_time += time.perf_counter() - t0
+        return drafts
+
+    def _draft_and_grow(self):
+        """Propose drafts, then grow with the per-row ``1 + draft length``
+        speculative ask (``grow`` sheds an ask rather than letting it force
+        a displacement).  Returns the proposals, keyed by slot."""
+        drafts = self._propose_drafts()
+        self.scheduler.grow(want={s: 1 + len(d) for s, d in drafts.items()}
+                            if drafts else None)
+        return drafts
+
+    def _fill_decode_row(self, slot: int, req: Request, n: int, drafts: dict,
+                         token, lens, counts, bt, idx) -> None:
+        """One decode row of the fused batch: the fed-back token plus the
+        row's granted drafts at positions ``req.len ..``; ``idx`` (when the
+        step carries any drafted row) reads logits at each fed position,
+        clamped to the row's own width."""
+        token[slot, 0] = req.out_tokens[-1]
+        if n > 1:
+            token[slot, 1:n] = drafts[slot]
+        lens[slot] = req.len
+        counts[slot] = n
+        bt[slot] = req.pages.block_row(bt.shape[1])
+        if idx is not None:
+            idx[slot] = np.minimum(np.arange(idx.shape[1]), n - 1)
+
+    def _grant_drafts(self, running, drafts) -> dict:
+        """Per-row verify width actually granted: the fed-back token plus
+        as many drafts as the row's post-grow page capacity covers —
+        ``grow`` sheds a speculative ask under pool pressure rather than
+        preempting for tokens that may be rejected, and page rounding can
+        cover a draft or two for free.  Trims ``drafts`` in place; returns
+        ``{slot: n_eff}`` (0 for prefilling rows, whose widths come from
+        ``plan_chunks``)."""
+        neff = {}
+        for slot, req in running.items():
+            if req.status != "running":
+                neff[slot] = 0
+                continue
+            n = 1
+            d = drafts.get(slot)
+            if d:
+                n = max(1, min(1 + len(d), req.pages.capacity - req.len))
+                if len(d) > n - 1:
+                    self._spec_trims += 1
+                    if n == 1:
+                        del drafts[slot]
+                    else:
+                        drafts[slot] = d[:n - 1]
+            neff[slot] = n
+        return neff
+
+    def _run_paged(self, token, bt, lens, counts, idx) -> np.ndarray:
+        """One fused paged step; returns per-row logits [B, K, V] (K = 1
+        without speculation)."""
+        logits, self.caches = self._paged_step(
+            self.params, self.caches, jnp.asarray(token), jnp.asarray(bt),
+            jnp.asarray(lens), jnp.asarray(counts),
+            None if idx is None else jnp.asarray(idx))
+        return np.asarray(logits)
+
+    def _verify_decode_row(self, req: Request, drafts: List[int],
+                           rows_slot: np.ndarray, n: int, greedy: bool,
+                           seed: int, finished: List[Request]) -> None:
+        """Accept the row's draft prefix (token-identical rule — see
+        :mod:`repro.serving.speculative`), advance the cache length by the
+        tokens whose KV is now live, truncate the block table past them
+        (rejected-KV rollback), and retire the request if it completed."""
+        appended, accepted = accept_tokens(
+            req, drafts, rows_slot, n,
+            lambda row, rq: self._pick(row, rq, greedy, seed))
+        req.len += appended
+        self._decode_rows += 1
+        self._decode_tokens += appended
+        if n > 1:
+            self._drafted += n - 1
+            self._accepted += accepted
+            self._rollback_pages += req.pages.truncate(req.len)
+        if req.done():
+            self.scheduler.finish(req)
+            finished.append(req)
 
     def drain(self, *, greedy: bool = True, seed: int = 0) -> List[Request]:
         """Run steps until every queued request has finished."""
@@ -406,21 +600,37 @@ class Engine:
         traffic — chunked: the fused ``[slots, c]`` step for every ladder
         shape ``c`` (``chunk_tokens`` halved down to ``m_r``) plus the
         ``[slots, 1]`` decode step; monolithic: the
-        decode step plus each geometric prefill bucket.  After warmup a
-        trace with admissions, chunked prefills, growth and preemption
-        triggers zero new XLA compilations (regression-tested via the
-        model's trace counter).  Safe on an idle engine: the warmup calls
-        run with ``new_counts == 0``, which routes every KV write to the
-        trash page, so pool pages and live state are untouched."""
+        decode step plus each geometric prefill bucket.  With speculation
+        on, additionally the verify variants: each decode-capable shape
+        with the ``[slots, spec_tokens+1]`` logits gather (drafted steps
+        read k+1 positions per row), and the drafter's own step shapes
+        (``Drafter.warmup``).  After warmup a
+        trace with admissions, chunked prefills, growth, preemption and
+        speculation triggers zero new XLA compilations (regression-tested
+        via the model's trace counter).  Safe on an idle engine: the warmup
+        calls run with ``new_counts == 0``, which routes every KV write to
+        the trash page, so pool pages and live state are untouched."""
         assert self.continuous
         assert not self.scheduler.has_work, "warmup() needs an idle engine"
         zb = jnp.zeros((self.slots,), jnp.int32)
         btb = jnp.zeros((self.slots, self.max_pages), jnp.int32)
+        idxz = (None if self.spec_tokens is None else
+                jnp.zeros((self.slots, self.spec_tokens + 1), jnp.int32))
         if self.chunked:
             for s in self._chunk_shapes() + [1]:
                 _, self.caches = self._paged_step(
                     self.params, self.caches,
-                    jnp.zeros((self.slots, s), jnp.int32), btb, zb, zb)
+                    jnp.zeros((self.slots, s), jnp.int32), btb, zb, zb, None)
+            if idxz is not None:
+                # any ladder shape can carry drafted rows (verify width
+                # rides the chunk ladder; [slots, 1] never does — a drafted
+                # step is at least spec_tokens+1 wide)
+                for s in self._chunk_shapes():
+                    _, self.caches = self._paged_step(
+                        self.params, self.caches,
+                        jnp.zeros((self.slots, s), jnp.int32), btb, zb, zb,
+                        idxz)
+                self.drafter.warmup()
             return
         zero = jnp.zeros((1,), jnp.int32)
         bt1 = jnp.zeros((1, self.max_pages), jnp.int32)
@@ -435,12 +645,18 @@ class Engine:
                                     fresh_slot_states(self.caches))
                 _, updated = self._paged_step(
                     self.params, view, jnp.zeros((1, bucket), jnp.int32), bt1,
-                    zero, zero)
+                    zero, zero, None)
                 self.caches = merge_slot(self.caches, updated, 0)
                 b = bucket + 1
         _, self.caches = self._paged_step(
             self.params, self.caches, jnp.zeros((self.slots, 1), jnp.int32),
-            btb, zb, zb)
+            btb, zb, zb, None)
+        if idxz is not None:       # the monolithic verify shape
+            _, self.caches = self._paged_step(
+                self.params, self.caches,
+                jnp.zeros((self.slots, self.spec_tokens + 1), jnp.int32),
+                btb, zb, zb, idxz)
+            self.drafter.warmup()
 
     def _prefill_request(self, req: Request, greedy: bool, seed: int) -> None:
         """Prefill one admitted request at its own length (rounded up to a
@@ -455,7 +671,7 @@ class Engine:
         view = prefill_view(self.caches, fresh_slot_states(self.caches))
         logits, updated = self._paged_step(
             self.params, view, jnp.asarray(token), jnp.asarray(bt),
-            jnp.zeros((1,), jnp.int32), jnp.full((1,), l, jnp.int32))
+            jnp.zeros((1,), jnp.int32), jnp.full((1,), l, jnp.int32), None)
         self.caches = merge_slot(self.caches, updated, req.slot)
         req.len = l
         req.chunk_steps += 1        # a monolithic prefill is one big chunk
@@ -464,13 +680,18 @@ class Engine:
 
     def _pick(self, logits_row: np.ndarray, req: Request, greedy: bool,
               seed: int) -> int:
-        if greedy:
+        if greedy or req.temperature <= 0.0:
             return int(np.argmax(logits_row))
         # per-request, per-position key: sampling is reproducible and
-        # independent of batch composition, like the greedy path
+        # independent of batch composition, like the greedy path — and of
+        # speculation, whose acceptance rule recomputes exactly these picks
+        s = seed if req.seed is None else req.seed
         key = jax.random.fold_in(jax.random.fold_in(
-            jax.random.PRNGKey(seed), req.rid), len(req.out_tokens))
-        return int(jax.random.categorical(key, jnp.asarray(logits_row)))
+            jax.random.PRNGKey(s), req.rid), len(req.out_tokens))
+        row = jnp.asarray(logits_row)
+        if req.temperature != 1.0:
+            row = row / jnp.float32(req.temperature)
+        return int(jax.random.categorical(key, row))
 
     # ------------------------------------------------------------------
     # batch API

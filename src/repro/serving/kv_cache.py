@@ -147,6 +147,22 @@ class SequencePages:
         self.pool.free(self.pages)
         self.pages = []
 
+    def truncate(self, tokens: int) -> int:
+        """Shrink the block table to cover ``tokens`` logical positions,
+        freeing whole trailing pages — the speculative-decode rollback:
+        rejected draft positions past ``tokens`` either share the last kept
+        page (their stale K/V is masked by ``lens + new_counts`` and
+        overwritten by the next write at that position) or sit in trailing
+        pages this returns to the pool.  Pages stay ``m_r``-aligned whole
+        tiles — truncation only ever drops whole pages, never splits one —
+        and the frees go through the pool's double-free accounting like any
+        release.  Returns the number of pages freed."""
+        keep = self.pool.pages_for(tokens)
+        dropped = self.pages[keep:]
+        self.pool.free(dropped)
+        del self.pages[keep:]
+        return len(dropped)
+
     def block_row(self, max_pages: int) -> np.ndarray:
         assert len(self.pages) <= max_pages, (len(self.pages), max_pages)
         row = np.zeros((max_pages,), np.int32)

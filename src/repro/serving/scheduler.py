@@ -27,7 +27,11 @@ step — the compiled step shape never changes).  The scheduler:
     how many prompt tokens have KV in the cache; when it reaches the
     prompt length the request samples its first token and starts decoding,
   - **grows** every running request by one KV position per decode step
-    (:meth:`Scheduler.grow`), allocating pages only as sequences actually
+    (:meth:`Scheduler.grow`) — or, under speculative decoding, by ``1 + k``
+    positions for the fed-back token plus the row's draft tokens, where
+    only the first position is mandatory and the speculative remainder is
+    shed on pressure instead of preempting for it —
+    allocating pages only as sequences actually
     lengthen instead of reserving ``prompt + max_new - 1`` up front — a pool
     sized for average-length outputs serves long-tail traffic instead of
     idling behind reservations (the paper's amortized-packing economics,
@@ -101,6 +105,13 @@ class Request:
     max_new: int
     eos_id: Optional[int] = None
     arrival: float = 0.0
+    # per-request sampling params (multi-tenant serving: one batch mixes
+    # temperatures and seeds; the speculative acceptance rule needs the
+    # request's own key stream, not a global one).  ``temperature == 0``
+    # forces greedy for this request even in a sampled drain; ``seed=None``
+    # falls back to the engine step's seed.
+    temperature: float = 1.0
+    seed: Optional[int] = None
 
     # runtime state (owned by the scheduler/engine)
     status: str = "waiting"       # waiting | prefilling | running | finished
@@ -162,6 +173,7 @@ class Scheduler:
         self.num_preemptions = 0
         self.num_pauses = 0
         self.prefill_stall_steps = 0           # steps where a chunk got < ask
+        self.spec_grow_fallbacks = 0           # speculative page asks shed
         self.peak_running = 0
 
     # ------------------------------------------------------------------
@@ -319,7 +331,7 @@ class Scheduler:
                     return               # caller falls back to capacity
                 self._pause(max(younger, key=lambda r: r.admit_seq))
 
-    def grow(self) -> List[Request]:
+    def grow(self, want: Optional[Dict[int, int]] = None) -> List[Request]:
         """Give every decoding request a KV slot for the position its next
         token writes (``len``), oldest admission first (PREFILLING slots get
         their pages chunk-wise in :meth:`plan_chunks` instead).  On pool
@@ -329,6 +341,19 @@ class Scheduler:
         *preempted* (pages released, tokens folded, recompute).  When the
         growing request is its own youngest victim, paused waiters' pages
         are reclaimed first — self-preemption is the true last resort.
+
+        ``want``: optional ``{slot: n}`` asking n >= 1 KV positions for a
+        row this step — the speculative verify step writes 1 fed-back token
+        plus up to k draft tokens.  Only the first position is mandatory:
+        a speculative ask is shed (all-or-nothing, counted in
+        ``spec_grow_fallbacks``) not just when it outsizes the free list
+        but whenever granting it would eat into the pages the *other*
+        running rows' mandatory one-token growth needs this step — a
+        speculative grant must never be what forces a preemption (tokens
+        it books may be rejected anyway), so the preemption loop only ever
+        runs for the same one-token demand as plain decode and the
+        termination proof is untouched.
+
         Returns the requests displaced this step (the engine masks their
         slots into the trash page for the in-flight decode).  No-op when
         admission was eager — capacity was reserved up front."""
@@ -336,6 +361,20 @@ class Scheduler:
         for req in sorted(self.running.values(), key=lambda r: r.admit_seq):
             if req.status != "running":
                 continue
+            n = 1 if want is None else max(1, want.get(req.slot, 1))
+            if n > 1:
+                need = max(0, self.pool.pages_for(req.len + n)
+                           - len(req.pages.pages))
+                if need == 0:
+                    continue     # slack in the held pages covers the ask
+                if need <= self.pool.num_free \
+                        - self._mandatory_growth_pages(req):
+                    try:
+                        req.pages.ensure(req.len + n)
+                        continue
+                    except OutOfPages:
+                        pass
+                self.spec_grow_fallbacks += 1
             while req.status == "running":
                 try:
                     req.pages.ensure(req.len + 1)
@@ -353,6 +392,16 @@ class Scheduler:
                         self._preempt(victim)
                     displaced.append(victim)
         return displaced
+
+    def _mandatory_growth_pages(self, exclude: Request) -> int:
+        """Pages the other decoding rows' mandatory one-token growth will
+        demand this step (0 or 1 each — one token crosses at most one page
+        boundary).  Rows grown earlier this pass already hold their page
+        and contribute 0, so this is exactly the not-yet-served demand a
+        speculative grant must leave room for."""
+        return sum(1 for r in self.running.values()
+                   if r is not exclude and r.status == "running"
+                   and self.pool.pages_for(r.len + 1) > len(r.pages.pages))
 
     def _pause(self, req: Request) -> None:
         """Displace a mid-prefill request *without* losing its work: it
@@ -445,5 +494,6 @@ class Scheduler:
             "num_preemptions": self.num_preemptions,
             "num_pauses": self.num_pauses,
             "prefill_stall_steps": self.prefill_stall_steps,
+            "spec_grow_fallbacks": self.spec_grow_fallbacks,
             "chunk_tokens": self.chunk_tokens,
         }

@@ -367,6 +367,61 @@ def test_preemption_recomputation_is_deterministic(smollm):
     assert tight.scheduler.num_free_slots == 2
 
 
+def test_sampled_preemption_recomputation_is_deterministic(smollm):
+    """The sampled twin of the greedy contract above (PR 2 verified it
+    manually; this automates it): sampling keys are (seed, rid, position)-
+    derived, never batch- or step-derived, so a preempted-and-recomputed
+    sampled continuation equals the uninterrupted one token for token."""
+    cfg, m, params = smollm
+    prompts = _prompts(cfg, [6, 5])
+    news = [12, 12]
+    ample = Engine(m, params, max_slots=2, page_tokens=8)
+    rids = [ample.add_request(p, n) for p, n in zip(prompts, news)]
+    want = {r.rid: r.out_tokens for r in ample.drain(greedy=False, seed=11)}
+    assert ample.num_preemptions == 0
+
+    tight = Engine(m, params, max_slots=2, page_tokens=8, num_pages=1 + 4)
+    rids2 = [tight.add_request(p, n) for p, n in zip(prompts, news)]
+    fin = {r.rid: r for r in tight.drain(greedy=False, seed=11)}
+    assert tight.num_preemptions >= 1
+    for rid, rid2 in zip(rids, rids2):
+        assert fin[rid2].out_tokens == want[rid]
+    assert tight.pool.num_used == 0
+    assert tight.pool.total_allocs == tight.pool.total_frees
+
+
+def test_per_request_sampling_params(smollm):
+    """temperature/seed ride the Request (multi-tenant prerequisite; the
+    speculative acceptance rule replays exactly these per-request keys):
+    a request's own seed makes the drain seed irrelevant, temperature=0
+    forces greedy inside a sampled drain, and temperature != 1 actually
+    reshapes the picks."""
+    cfg, m, params = smollm
+    prompts = _prompts(cfg, [6, 5])
+
+    def serve(drain_seed, temps=(0.0, 0.7), seeds=(None, 11)):
+        eng = Engine(m, params, max_slots=3)
+        rids = [eng.add_request(p, 8, temperature=t, seed=s)
+                for p, t, s in zip(prompts, temps, seeds)]
+        fin = {r.rid: r.out_tokens for r in eng.drain(greedy=False,
+                                                      seed=drain_seed)}
+        return [fin[rid] for rid in rids]
+
+    a1, b1 = serve(drain_seed=5)
+    a2, b2 = serve(drain_seed=999)
+    assert b1 == b2, "a per-request seed must shadow the drain seed"
+    assert a1 == a2, "temperature=0 rows must not depend on any seed"
+
+    solo = Engine(m, params, max_slots=1)
+    solo.add_request(prompts[0], 8)
+    assert a1 == solo.drain()[0].out_tokens   # t=0 == greedy, same rid
+
+    # same rid + same seed, cold vs hot: temperature genuinely moved picks
+    c1 = serve(drain_seed=5, temps=(0.2,), seeds=(11,))[0]
+    h1 = serve(drain_seed=5, temps=(5.0,), seeds=(11,))[0]
+    assert c1 != h1
+
+
 def test_out_of_pages_drain_terminates(smollm):
     """Sustained OutOfPages pressure: 8 requests whose lifetimes need 4
     pages each contend for 6 pages across 3 slots.  The drain must
