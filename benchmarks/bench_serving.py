@@ -2,10 +2,14 @@
 prompt lengths / token budgets; scalable vs fixed layout policy; lazy page
 allocation vs eager full-lifetime reservation on a long-tail trace;
 chunked prefill vs monolithic prefill on a mixed long/short-prompt trace
-(time-to-first-token and inter-token latency percentiles); and speculative
+(time-to-first-token and inter-token latency percentiles); speculative
 decoding vs plain decode on an n-gram-friendly trace (token-identical
 outputs asserted for greedy and sampled, decode tokens per row-step as the
-speedup measure).
+speedup measure); and the prefix cache vs cache-off on a shared-system-
+prompt trace (token-identical outputs asserted across greedy/sampled,
+monolithic/chunked and spec-on at <= 0.5x the prefill tokens computed,
+plus a tight-pool run showing preempt-resume recomputing only the
+uncached suffix).
 
 Results are also written machine-readable to ``BENCH_serving.json`` (see
 ``--json-out``) so the repo's perf trajectory is tracked across PRs.
@@ -386,6 +390,170 @@ def bench_chunked(model, params, reqs, slots, chunk_tokens, load=0.95,
 
 
 # ---------------------------------------------------------------------------
+# prefix cache: shared-system-prompt trace, cache-on vs cache-off
+# ---------------------------------------------------------------------------
+
+def make_prefix_trace(cfg, n, sys_tokens, max_new, seed=0):
+    """Every request = one shared system prompt + a short unique suffix —
+    the prompt-caching workload (few-shot headers, agent scaffolds) where
+    a prefix cache pays: the shared pages are computed once per *content*
+    and every later arrival prefills only its own suffix.  Arrivals are
+    staggered so admissions see earlier requests' pages (concurrent
+    admissions of a cold prefix cannot share — someone must compute it)."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    sysp = np.asarray(jax.random.randint(key, (sys_tokens,), 0, cfg.vocab))
+    reqs = []
+    for i in range(n):
+        sfx = np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                            (int(rng.integers(2, 7)),), 0,
+                                            cfg.vocab))
+        reqs.append((np.concatenate([sysp, sfx]),
+                     int(rng.integers(3, max_new + 1))))
+    return reqs
+
+
+def run_prefix(model, params, reqs, slots, *, prefix_cache, chunk_tokens=None,
+               spec_tokens=None, num_pages=None, greedy=True, seed=0,
+               page_tokens=16):
+    """Warmed, staggered drain with the zero-recompile assert and (cache
+    on) the end-of-drain balance check: clearing the cache must return the
+    pool to zero used pages with allocs+shares == frees."""
+    eng = Engine(model, params, max_slots=slots, page_tokens=page_tokens,
+                 num_pages=num_pages, chunk_tokens=chunk_tokens,
+                 spec_tokens=spec_tokens, prefix_cache=prefix_cache)
+    eng.warmup()
+    compiles = dict(model.trace_counts)
+    rids = [eng.add_request(p, n, arrival=float(2 * i))
+            for i, (p, n) in enumerate(reqs)]
+    clock, fin = 0.0, {}
+    t0 = time.perf_counter()
+    while eng.scheduler.has_work:
+        fin.update((r.rid, r) for r in eng.step(now=clock, greedy=greedy,
+                                                seed=seed))
+        clock += 1.0
+    dt = time.perf_counter() - t0
+    assert dict(model.trace_counts) == compiles, \
+        "prefix-cache step() compiled a new XLA program after warmup()"
+    assert sorted(fin) == sorted(rids), "drain lost requests"
+    if eng.prefix_cache is not None:
+        eng.prefix_cache.clear()
+    assert eng.pool.num_used == 0, "leaked pages"
+    assert eng.pool.total_allocs + eng.pool.total_shares \
+        == eng.pool.total_frees, "alloc/share/free imbalance"
+    return eng, [fin[rid].out_tokens for rid in rids], dt
+
+
+def bench_prefix(model, params, reqs, slots, chunk_tokens, spec_tokens,
+                 smoke):
+    """Cache-on vs cache-off on the shared-prefix trace.  The contract
+    half (what ``tier1.sh --bench-smoke`` buys): outputs token-identical
+    across greedy/sampled, monolithic/chunked and spec-on, at <= 0.5x the
+    prefill tokens computed.  The perf half: prefill tokens saved, plus a
+    tight-pool run where preemption releases pages into the cache — the
+    resume recompute is bounded by tokens generated since admission + one
+    partial page, against the PR-2 baseline's full-reprefill recompute."""
+    total_prompt = sum(p.shape[0] for p, _ in reqs)
+    print(f"[bench_serving] prefix cache: {len(reqs)} requests sharing one "
+          f"system prompt ({total_prompt} prompt tokens total), "
+          f"{slots} slots")
+    base, base_out, base_dt = run_prefix(model, params, reqs, slots,
+                                         prefix_cache=False)
+    _, base_out_s, _ = run_prefix(model, params, reqs, slots,
+                                  prefix_cache=False, greedy=False, seed=13)
+    off_tokens = base.stats()["prefill_tokens"]
+    record = {"requests": len(reqs), "prompt_tokens": total_prompt,
+              "prefill_tokens_off": off_tokens}
+    rows = [("mono/greedy", dict()),
+            ("chunked/greedy", dict(chunk_tokens=chunk_tokens)),
+            ("mono/sampled", dict(greedy=False, seed=13)),
+            ("spec/greedy", dict(spec_tokens=spec_tokens))]
+    if not smoke:
+        rows += [("chunked/sampled", dict(chunk_tokens=chunk_tokens,
+                                          greedy=False, seed=13)),
+                 ("spec/sampled", dict(spec_tokens=spec_tokens,
+                                       greedy=False, seed=13)),
+                 ("chunked+spec/greedy", dict(chunk_tokens=chunk_tokens,
+                                              spec_tokens=spec_tokens))]
+    for label, kw in rows:
+        eng, outs, dt = run_prefix(model, params, reqs, slots,
+                                   prefix_cache=True, **kw)
+        want = base_out_s if kw.get("greedy") is False else base_out
+        assert outs == want, \
+            f"prefix cache ({label}) outputs diverged from cache-off"
+        st = eng.stats()
+        pc = st["prefix_cache"]
+        on_tokens = st["prefill_tokens"]
+        assert on_tokens <= 0.5 * off_tokens, \
+            f"{label}: prefill {on_tokens} tokens > 0.5x cache-off " \
+            f"{off_tokens} on a shared-prefix trace"
+        record[label] = {"prefill_tokens": on_tokens,
+                         "prefill_ratio": on_tokens / off_tokens,
+                         "hit_rate": pc["hit_rate"],
+                         "hit_tokens": pc["hit_tokens"],
+                         "cow_copies": pc["cow_copies"],
+                         "evictions": pc["evictions"],
+                         "tok_per_s": sum(len(o) for o in outs) / dt}
+        print(f"  {label:<19} prefill {on_tokens:>5}/{off_tokens} tokens "
+              f"({on_tokens / off_tokens:.2f}x)  hit rate {pc['hit_rate']:.2f}"
+              f"  cow={pc['cow_copies']} evictions={pc['evictions']}")
+
+    # preempt-resume: short prompts with long budgets on a pool sized well
+    # below the concurrent working set, so *growth* (not admission) hits
+    # OutOfPages and preempts.  With the cache, the victim's pages go into
+    # the cache and its resume recomputes only the uncached suffix; the
+    # PR-2 baseline re-prefills the whole folded prompt
+    pt = round_up(16, model.ctx.layout(model.compute_dtype).m_r)
+    key = jax.random.PRNGKey(17)
+    cfg_vocab = int(model.cfg.vocab)
+    preqs = [(np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                            (pt // 2 + i % 3,), 0,
+                                            cfg_vocab)),
+              2 * pt - 3 * (i % 3))
+             for i in range(2 * slots)]
+    per_req = max(ceil_div(p.shape[0] + n - 1, pt) for p, n in preqs)
+    tight_pages = 1 + max(per_req + 1, (slots * per_req) * 2 // 3)
+    tight_kw = dict(num_pages=tight_pages, page_tokens=pt)
+    _, ample_out, _ = run_prefix(model, params, preqs, slots,
+                                 prefix_cache=False)
+    off_eng, off_out, _ = run_prefix(model, params, preqs, slots,
+                                     prefix_cache=False, **tight_kw)
+    on_eng, on_out, _ = run_prefix(model, params, preqs, slots,
+                                   prefix_cache=True, **tight_kw)
+    assert on_out == ample_out and off_out == ample_out, \
+        "tight-pool outputs diverged (preemption must not change tokens)"
+    assert off_eng.num_preemptions >= 1, \
+        "the tight pool should force at least one preemption"
+    total_pprompt = sum(p.shape[0] for p, _ in preqs)
+    off_recompute = off_eng.stats()["prefill_tokens"] - total_pprompt
+    on_sched = on_eng.scheduler.stats()
+    record["preempt_resume"] = {
+        "pool_pages": tight_pages - 1,
+        "preemptions_off": off_eng.num_preemptions,
+        "preemptions_on": on_eng.num_preemptions,
+        "recompute_tokens_off": off_recompute,
+        "resumes_on": on_sched["resumes"],
+        "recompute_tokens_on": on_sched["resume_recompute_tokens"],
+    }
+    for e in on_eng.scheduler.resume_events:
+        # reclaims and pool-pressure evictions legitimately lose the cached
+        # prefix before the resume; every other resume must hit it
+        assert e["reclaimed"] or e["evicted"] or \
+            e["recompute"] <= e["generated_since"] + pt, \
+            f"resume recomputed past the uncached suffix: {e}"
+    print(f"  preempt-resume at {tight_pages - 1} pages: cache-off "
+          f"recomputed {off_recompute} tokens "
+          f"({off_eng.num_preemptions} preemptions); cache-on recomputed "
+          f"{on_sched['resume_recompute_tokens']} over "
+          f"{on_sched['resumes']} resumes "
+          f"({on_eng.num_preemptions} preemptions) — bounded by "
+          f"generated-since-admission + one partial page")
+    print(f"  outputs token-identical to cache-off for all "
+          f"{len(rows)} cache-on configs (greedy + sampled)")
+    return record
+
+
+# ---------------------------------------------------------------------------
 # speculative decoding: drafted verify steps vs one-token decode steps
 # ---------------------------------------------------------------------------
 
@@ -525,6 +693,12 @@ def main(argv=None):
                     help="skip the chunked-vs-monolithic latency section")
     ap.add_argument("--skip-spec", action="store_true",
                     help="skip the speculative-decoding section")
+    ap.add_argument("--skip-prefix", action="store_true",
+                    help="skip the prefix-cache section")
+    ap.add_argument("--sys-tokens", type=int, default=48,
+                    help="shared system-prompt length for the prefix-cache "
+                    "trace (3 pages at the default page size: long enough "
+                    "that sharing dominates, short enough for CPU smoke)")
     ap.add_argument("--json-out", default=None,
                     help="write machine-readable results here (default: "
                     "BENCH_serving.json at the repo root; '-' disables)")
@@ -621,6 +795,18 @@ def main(argv=None):
                                            args.smoke)
         results["spec_decode_tokens_per_row_step"] = \
             report["speculative"]["ngram"]["decode_tokens_per_row_step"]
+
+    if not args.skip_prefix and all(t == "attn" for t in cfg.layer_types):
+        model, params = models[policies[0]]
+        prefix_reqs = make_prefix_trace(cfg, 6 if args.smoke else 12,
+                                        32 if args.smoke else args.sys_tokens,
+                                        6 if args.smoke else args.max_new,
+                                        args.seed)
+        report["prefix_cache"] = bench_prefix(model, params, prefix_reqs,
+                                              args.slots, args.chunk_tokens,
+                                              args.spec_tokens, args.smoke)
+        results["prefix_prefill_ratio"] = \
+            report["prefix_cache"]["mono/greedy"]["prefill_ratio"]
 
     if args.json_out != "-" and not (args.smoke and args.json_out is None):
         # smoke runs don't clobber the tracked perf trajectory unless asked;

@@ -15,13 +15,19 @@ token.  With ``--spec-tokens k``, a prompt-lookup n-gram drafter rides up
 to k guesses per decode row through the same fused step and the engine
 accepts the prefix the target model agrees with — once more without
 changing a single token, greedy or sampled (the acceptance rule replays
-the engine's own deterministic picks).  ``Engine.stats()`` counters (step
-wall time, slot occupancy, prefill stalls, chunks per prompt, acceptance
-rate, draft overhead, compile counts) are printed at the end.
+the engine's own deterministic picks).  With ``--prefix-cache``, every
+request shares one system prompt and the layout-keyed prefix cache serves
+the shared pages byte-for-byte: later arrivals prefill only their own
+suffix, preemptions release pages into the cache instead of recomputing,
+and — once more — not a single token changes.  ``Engine.stats()`` counters
+(step wall time, slot occupancy, prefill stalls, chunks per prompt,
+acceptance rate, draft overhead, hit rate, CoW copies, compile counts) are
+printed at the end.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py --arch smollm2-135m
 Fused:                     ... serve_decode.py --chunk-tokens 16
 Speculative:               ... serve_decode.py --spec-tokens 3
+Prompt caching:            ... serve_decode.py --prefix-cache
 """
 
 import argparse
@@ -55,6 +61,13 @@ def main():
                     "drafter proposing up to this many tokens per decode "
                     "row (pure-attention models; outputs are unchanged — "
                     "accepted drafts only save steps)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share KV pages across requests via the layout-"
+                    "keyed prefix cache (pure-attention models); the trace "
+                    "prepends a common system prompt so later arrivals hit "
+                    "the cache — outputs are unchanged, prefill work drops")
+    ap.add_argument("--sys-tokens", type=int, default=32,
+                    help="shared system-prompt length for --prefix-cache")
     ap.add_argument("--sample", action="store_true")
     args = ap.parse_args()
 
@@ -68,7 +81,8 @@ def main():
     engine = Engine(model, params, max_slots=args.slots,  # weights pre-packed
                     num_pages=args.pool_pages,
                     chunk_tokens=args.chunk_tokens,
-                    spec_tokens=args.spec_tokens)
+                    spec_tokens=args.spec_tokens,
+                    prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(1)
     key = jax.random.PRNGKey(1)
 
@@ -88,13 +102,18 @@ def main():
         print(out[:, :12])
         return
 
-    # a ragged arrival trace: request i arrives at step 2*i
+    # a ragged arrival trace: request i arrives at step 2*i; with the
+    # prefix cache on, everyone shares one system prompt (the cache's
+    # bread-and-butter workload) ahead of their own ragged suffix
+    sysp = (np.asarray(jax.random.randint(key, (args.sys_tokens,), 0,
+                                          cfg.vocab))
+            if args.prefix_cache else np.zeros((0,), np.int32))
     trace = []
     for i in range(args.requests):
         plen = int(rng.integers(2, args.max_prompt + 1))
         prompt = np.asarray(jax.random.randint(jax.random.fold_in(key, i),
                                                (plen,), 0, cfg.vocab))
-        trace.append((2.0 * i, prompt,
+        trace.append((2.0 * i, np.concatenate([sysp, prompt]),
                       int(rng.integers(2, args.new_tokens + 1))))
 
     t0 = time.perf_counter()
@@ -113,6 +132,8 @@ def main():
             else "monolithic prefill")
     if engine.spec_tokens is not None:
         mode += f" + spec k={engine.spec_tokens}"
+    if engine.prefix_cache is not None:
+        mode += " + prefix cache"
     print(f"[serve] {cfg.name}: {len(finished)} ragged requests ({mode}), "
           f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s on CPU host; "
           f"page={st['page_tokens']} tok — m_r-aligned; "
@@ -125,6 +146,15 @@ def main():
           f"{es['prefill_stall_steps']} prefill-stall steps, "
           f"{es['chunks_per_prompt']:.2f} chunks/prompt, "
           f"compiles {es['compiles']}")
+    if "prefix_cache" in es:
+        pc = es["prefix_cache"]
+        print(f"[serve] prefix cache: hit rate {pc['hit_rate']:.2f} "
+              f"({pc['hits']}/{pc['lookups']} lookups, "
+              f"{pc['hit_tokens']} prompt tokens served from cache), "
+              f"prefill computed {es['prefill_tokens']} tokens, "
+              f"{pc['entries']} cached pages "
+              f"({pc['shared_pages']} currently shared), "
+              f"{pc['cow_copies']} CoW copies, {pc['evictions']} evictions")
     if "speculative" in es:
         sp = es["speculative"]
         print(f"[serve] speculation: accepted {sp['accepted']}/{sp['drafted']} "

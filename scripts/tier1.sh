@@ -5,10 +5,13 @@
 # With the serving-allocator smoke:  ./scripts/tier1.sh --bench-smoke
 #   (runs bench_serving.py at toy sizes — 2 slots, tiny pool, long-tail
 #   trace at 50% of the eager reservation, the chunked-vs-monolithic
-#   prefill A/B, and the speculative-decoding section — lazy-allocation/
-#   preemption regressions and any chunked-vs-monolithic or
-#   spec-vs-baseline output mismatch (greedy or sampled) fail the run
-#   without the full bench)
+#   prefill A/B, the speculative-decoding section, and the prefix-cache
+#   section (shared-system-prompt trace: cache-on must be token-identical
+#   to cache-off at <= 0.5x the prefill tokens, and a tight-pool
+#   preempt-resume must recompute only the uncached suffix) —
+#   lazy-allocation/preemption regressions and any chunked-vs-monolithic,
+#   spec-vs-baseline, or cache-on-vs-cache-off output mismatch (greedy or
+#   sampled) fail the run without the full bench)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -62,6 +62,23 @@ preempted-for); rejected positions are rolled back by truncating the block
 table (:meth:`SequencePages.truncate`), and a preemption can never fold a
 rejected draft because ``out_tokens`` only ever holds accepted tokens.
 
+With ``prefix_cache=True`` (pure-attention models, lazy allocation) the
+engine shares KV pages across requests through a **layout-keyed prefix
+cache** (:mod:`repro.serving.prefix_cache`): admission starts prefill at
+the longest cached page-chain prefix of the prompt (shared pages are
+refcounted and read-only; the one place the cursor can land inside a
+shared page — a fully-cached prompt — CoW-splits it first), prefill
+inserts newly-completed full pages as it goes (chunked) or at completion
+(monolithic), and preemption releases pages *into the cache* so
+re-admission recomputes only the uncached suffix.  Cached KV is
+bit-identical to recomputed KV (pages are immutable once full and keyed by
+layout + exact token content), so outputs are token-identical to
+``prefix_cache=False`` by construction — greedy and sampled, both prefill
+policies, speculation on or off — while shared system prompts prefill once
+per *content* instead of once per request and preemption stops costing a
+full recompute.  ``Engine.stats()["prefix_cache"]`` reports hit rate,
+shared pages, CoW copies and evictions.
+
 Rows are mathematically independent (per-row attention over per-row pages,
 per-row softmax/argmax), so a request's greedy output is identical whatever
 else shares the batch — admission order cannot change results.
@@ -89,8 +106,10 @@ from repro.core.layout import ceil_div, round_up
 from repro.core.linear import prepack_params
 from repro.distributed import sharding
 from repro.models.model import ReproModel
-from repro.serving.kv_cache import (PagedKVPool, fresh_slot_states,
-                                    merge_slot, prefill_view)
+from repro.serving.kv_cache import (PagedKVPool, copy_pages,
+                                    fresh_slot_states, merge_slot,
+                                    prefill_view)
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.speculative import Drafter, NgramDrafter, accept_tokens
 
@@ -107,7 +126,8 @@ class Engine:
                  chunk_tokens: Optional[int] = None,
                  token_budget: Optional[int] = None,
                  spec_tokens: Optional[int] = None,
-                 drafter: Optional[Drafter] = None):
+                 drafter: Optional[Drafter] = None,
+                 prefix_cache: bool = False):
         self.model = model
         self.mesh = mesh
         self.params = (prepack_params(params, model.ctx)
@@ -126,6 +146,10 @@ class Engine:
             assert spec_tokens is None and drafter is None, \
                 f"{model.cfg.family} serves via generate_static; " \
                 f"speculative decode needs the continuous paged path"
+            assert not prefix_cache, \
+                f"{model.cfg.family} serves via generate_static; the " \
+                f"prefix cache shares paged KV, which the static path " \
+                f"does not use"
             return
 
         layout = model.ctx.layout(model.compute_dtype)
@@ -168,11 +192,31 @@ class Engine:
             num_pages = 1 + self.slots * ceil_div(max_len, page_tokens)
         self.pool = PagedKVPool(num_pages, page_tokens)
         self.max_pages = ceil_div(max_len, self.pool.page_tokens)
+        # layout-keyed prefix cache: pages are shared byte-for-byte across
+        # requests, so the hash chain is rooted in the layout geometry — a
+        # layout change can never alias stale KV (pure-attention only: a
+        # shared page rebuilds attention state by table lookup, but
+        # recurrent scan state cannot be restored from cached pages)
+        self.prefix_cache: Optional[PrefixCache] = None
+        if prefix_cache:
+            assert all_attn, \
+                f"prefix cache: {model.cfg.name} mixes recurrent layers " \
+                f"({model.cfg.layer_types}) — cached KV pages restore " \
+                f"attention state by block-table lookup, but an ssm/rwkv " \
+                f"scan state cannot be rebuilt from shared pages"
+            assert not eager, \
+                "prefix cache needs lazy allocation (eager=True reserves " \
+                "full lifetimes, which refcounted shared pages would " \
+                "double-count)"
+            self.prefix_cache = PrefixCache(self.pool,
+                                            layout_key=(layout.m_r,))
+            self.pool.page_copier = self._copy_page
         self.scheduler = Scheduler(self.slots, self.pool, max_len,
                                    eager=eager,
                                    watermark_pages=watermark_pages,
                                    chunk_tokens=chunk_tokens,
-                                   chunk_align=layout.m_r)
+                                   chunk_align=layout.m_r,
+                                   prefix_cache=self.prefix_cache)
         # speculative decode (spec_tokens=k): every decode row may carry
         # 1 + k positions through the same fused ragged step
         self.spec_tokens = spec_tokens
@@ -203,6 +247,8 @@ class Engine:
         self._mixed_steps = 0            # steps carrying >= 1 prefill chunk
         self._finished_count = 0
         self._chunk_steps_total = 0      # prefill calls/chunks over finished
+        self._prefill_tokens = 0         # prompt tokens actually computed
+                                         # (cache hits skip theirs)
         # speculative counters
         self._draft_time = 0.0           # host wall time inside the drafter
         self._drafted = 0                # draft tokens actually verified
@@ -219,6 +265,12 @@ class Engine:
             self.caches = jax.device_put(self.caches,
                                          sharding.named(mesh, specs))
         self._paged_step = model.jit_step("paged")
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """Device-side copy-on-write: duplicate page ``src`` into ``dst``
+        across every layer group's K/V pool (installed as the pool's
+        ``page_copier``; host bookkeeping lives in ``PagedKVPool.cow``)."""
+        self.caches = copy_pages(self.caches, jnp.int32(src), jnp.int32(dst))
 
     # ------------------------------------------------------------------
     # continuous-batching API
@@ -270,10 +322,13 @@ class Engine:
             "finished": self._finished_count,
             "num_preemptions": self.scheduler.num_preemptions,
             "num_pauses": self.scheduler.num_pauses,
+            "prefill_tokens": self._prefill_tokens,
             "compiles": dict(self.model.trace_counts),
             "scheduler": self.scheduler.stats(),
             "pool": self.pool.stats(),
         }
+        if self.prefix_cache is not None:
+            out["prefix_cache"] = self.prefix_cache.stats()
         if self.spec_tokens is not None:
             out["speculative"] = {
                 "spec_tokens": self.spec_tokens,
@@ -322,7 +377,15 @@ class Engine:
 
     def _step_monolithic(self, now, greedy: bool, seed: int) -> List[Request]:
         finished = []
-        for req in self.scheduler.admit(now):
+        # one admission at a time: each prefill lands its pages in the
+        # prefix cache before the next admission's lookup runs, so
+        # same-step arrivals sharing a prompt prefix share pages too
+        # (without a cache this is byte-identical to batch admission)
+        while True:
+            admitted = self.scheduler.admit(now, limit=1)
+            if not admitted:
+                break
+            req = admitted[0]
             self._prefill_request(req, greedy, seed)
             if req.done():
                 self.scheduler.finish(req)
@@ -430,6 +493,13 @@ class Engine:
                 req.prefill_cursor += n
                 req.len = req.prefill_cursor
                 req.chunk_steps += 1
+                self._prefill_tokens += n
+                if self.prefix_cache is not None:
+                    # write newly-completed full pages into the cache as
+                    # the cursor advances — a later arrival (or this
+                    # request's own preempt-resume) shares them mid-stream
+                    self.prefix_cache.insert(req.prompt, req.pages.pages,
+                                             req.prefill_cursor)
                 if req.prefill_cursor < req.prompt_len:
                     continue              # more chunks to come
                 # prefill complete: the logits at the last prompt token are
@@ -612,6 +682,10 @@ class Engine:
         the trash page, so pool pages and live state are untouched."""
         assert self.continuous
         assert not self.scheduler.has_work, "warmup() needs an idle engine"
+        if self.prefix_cache is not None:
+            # prime the CoW page-copy program (trash page onto itself:
+            # contents are garbage by definition, live pages untouched)
+            self._copy_page(0, 0)
         zb = jnp.zeros((self.slots,), jnp.int32)
         btb = jnp.zeros((self.slots, self.max_pages), jnp.int32)
         idxz = (None if self.spec_tokens is None else
@@ -662,19 +736,29 @@ class Engine:
         """Prefill one admitted request at its own length (rounded up to a
         geometric packed-tile bucket so prompt-length compilations stay
         bounded and amortize across requests; padded rows are masked into
-        the trash page)."""
+        the trash page).  With a prefix cache, admission already parked the
+        cursor at the hit, so only the uncached suffix is computed — the
+        shared prefix pages enter the step read-only through the block
+        table, exactly like a decode row's past (lens = cursor)."""
         l = req.prompt_len
-        bucket = self._prefill_bucket(l)
+        start = req.prefill_cursor
+        n = l - start
+        bucket = self._prefill_bucket(n)
         token = np.zeros((1, bucket), np.int32)
-        token[0, :l] = req.prompt
+        token[0, :n] = req.prompt[start:]
         bt = req.pages.block_row(self.max_pages)[None]
         view = prefill_view(self.caches, fresh_slot_states(self.caches))
         logits, updated = self._paged_step(
             self.params, view, jnp.asarray(token), jnp.asarray(bt),
-            jnp.zeros((1,), jnp.int32), jnp.full((1,), l, jnp.int32), None)
+            jnp.full((1,), start, jnp.int32), jnp.full((1,), n, jnp.int32),
+            None)
         self.caches = merge_slot(self.caches, updated, req.slot)
         req.len = l
+        req.prefill_cursor = l
         req.chunk_steps += 1        # a monolithic prefill is one big chunk
+        self._prefill_tokens += n
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(req.prompt, req.pages.pages, l)
         req.out_tokens.append(
             self._pick(np.asarray(logits[0, 0, :]), req, greedy, seed))
 

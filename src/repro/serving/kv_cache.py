@@ -10,10 +10,30 @@ the cache to a common length, and pool capacity is consumed by tokens that
 actually exist rather than by reserved lifetimes (the scheduler handles
 exhaustion by preempting, see :mod:`repro.serving.scheduler`).
 
-The allocator tracks the set of live page ids, so a double-free or a free
-of a never-allocated page — either of which would eventually hand one page
-to two requests and silently cross their KV streams — fails loudly at the
-``free`` call instead.
+The allocator tracks a **refcount** per live page id (PR 5): a page may be
+shared byte-for-byte by several requests and by the prefix cache
+(:mod:`repro.serving.prefix_cache`), ``free`` drops one reference, and the
+page returns to the free list only at refcount zero.  A free of a page with
+no outstanding references — which would eventually hand one page to two
+requests and silently cross their KV streams — still fails loudly at the
+``free`` call, shared pages included.
+
+Sharing rests on three invariants, spelled out here because every layer of
+the serving stack leans on them:
+
+  - **pages are immutable once full** — the paged step only ever writes
+    positions ``lens .. lens + new_counts - 1``, so a page whose every
+    token is committed is never touched again (truncation is the one
+    exception, handled next); only such full pages enter the prefix cache;
+  - **copy-on-write before any in-place write** — a partially-filled page
+    about to be written (the admission cursor landing mid-page on a
+    fully-cached prompt, or a speculative rollback truncating into a kept
+    tail page) must be private first: :meth:`PagedKVPool.cow` allocates a
+    fresh page, device-copies the contents, and swaps it into the block
+    table, so no shared page is ever written in place;
+  - **cache keys include the layout** — pages are whole ``m_r``-aligned
+    microkernel tiles, so the prefix-cache hash chain is rooted in
+    ``(m_r, page_tokens)`` and a layout change can never alias stale KV.
 
 The page size is derived from the active :class:`~repro.core.layout.
 PackedLayout`: ``page_tokens = round_up(requested, m_r)``, so a page always
@@ -40,7 +60,8 @@ step can never corrupt a live request.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Optional
+import weakref
+from typing import Dict, Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +69,7 @@ import numpy as np
 
 from repro.core.layout import PackedLayout, ceil_div, round_up
 
-__all__ = ["OutOfPages", "PagedKVPool", "SequencePages",
+__all__ = ["OutOfPages", "PagedKVPool", "SequencePages", "copy_pages",
            "fresh_slot_states", "prefill_view", "merge_slot",
            "map_slot_states"]
 
@@ -58,11 +79,29 @@ class OutOfPages(RuntimeError):
 
 
 class PagedKVPool:
-    """Host-side page allocator for the device page pool.
+    """Host-side refcounting page allocator for the device page pool.
 
     ``page_tokens`` is rounded up to a multiple of the layout's ``m_r`` so
     page boundaries coincide with packed-tile boundaries.  Page 0 is the
-    trash page and is never handed out.
+    trash page (``reserved_pages``) and is never handed out — every
+    capacity question should use :attr:`usable_pages`, not ``num_pages``.
+
+    Sharing (PR 5): :meth:`alloc` hands out a page at refcount 1,
+    :meth:`share` adds a reference (a prefix-cache hit handing the page to
+    a second request, or the cache registering its own claim), and
+    :meth:`free` drops one — the page returns to the free list only at
+    refcount zero.  A page with refcount > 1 is **read-only** (see the
+    module docstring); :meth:`cow` is the copy-on-write split that makes a
+    shared page writable again.  Two optional hooks integrate the prefix
+    cache without the allocator knowing its structure:
+
+      - ``reclaimer``: an object with ``evictable() -> int`` and
+        ``evict(n) -> int``; :meth:`alloc` calls ``evict(1)`` on an empty
+        free list before raising, so cache-held pages are always
+        reclaimable under pool pressure — the scheduler's "a solo request
+        fits" termination invariant survives the cache holding pages;
+      - ``page_copier``: ``fn(src, dst)`` performing the device-side page
+        copy :meth:`cow` needs (the engine owns the cache pytree).
     """
 
     def __init__(self, num_pages: int, page_tokens: int,
@@ -72,13 +111,24 @@ class PagedKVPool:
         assert num_pages >= 2, "need at least the trash page + one real page"
         self.num_pages = num_pages
         self.page_tokens = page_tokens
+        self.reserved_pages = 1          # page 0: the trash page
         # LIFO free list → recently-freed (cache-warm) pages are reused first
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
-        self._allocated: set = set()
+        self._ref: Dict[int, int] = {}   # page id -> outstanding references
+        self._seqs: "weakref.WeakSet[SequencePages]" = weakref.WeakSet()
         # allocator stats (cumulative; peak_used drives pool-sizing decisions)
         self.total_allocs = 0
+        self.total_shares = 0
         self.total_frees = 0
         self.peak_used = 0
+        self.cow_copies = 0
+        self.reclaimer = None            # prefix cache, when enabled
+        self.page_copier = None          # engine-installed device page copy
+
+    @property
+    def usable_pages(self) -> int:
+        """Pages that can ever hold live KV (reserved pages excluded)."""
+        return self.num_pages - self.reserved_pages
 
     @property
     def num_free(self) -> int:
@@ -86,46 +136,121 @@ class PagedKVPool:
 
     @property
     def num_used(self) -> int:
-        return (self.num_pages - 1) - len(self._free)
+        return self.usable_pages - len(self._free)
+
+    @property
+    def num_available(self) -> int:
+        """Free pages plus cache-held pages reclaimable on demand — the
+        number an admission/growth decision may count on, since
+        :meth:`alloc` evicts from the cache before giving up."""
+        extra = self.reclaimer.evictable() if self.reclaimer is not None else 0
+        return len(self._free) + extra
 
     def pages_for(self, tokens: int) -> int:
         return ceil_div(max(0, tokens), self.page_tokens)
 
     def can_fit(self, tokens: int) -> bool:
-        return self.pages_for(tokens) <= self.num_free
+        return self.pages_for(tokens) <= self.num_available
+
+    def ref(self, page: int) -> int:
+        """Outstanding references to ``page`` (0 = free)."""
+        return self._ref.get(page, 0)
+
+    def is_shared(self, page: int) -> bool:
+        return self._ref.get(page, 0) > 1
 
     def alloc(self) -> int:
+        if not self._free and self.reclaimer is not None:
+            # LRU eviction under pool pressure: cached-but-unreferenced
+            # pages are reclaimable, so a cache can never deadlock a drain
+            self.reclaimer.evict(1)
         if not self._free:
             raise OutOfPages("KV pool exhausted")
         p = self._free.pop()
-        self._allocated.add(p)
+        self._ref[p] = 1
         self.total_allocs += 1
         self.peak_used = max(self.peak_used, self.num_used)
         return p
 
+    def share(self, pages: Iterable[int]) -> None:
+        """Add one reference to each page (it must be live).  The new
+        holder sees the page read-only: shared pages are never written in
+        place (:meth:`cow` first)."""
+        for p in pages:
+            assert self._ref.get(p, 0) >= 1, \
+                f"page {p} shared while not allocated — sharing a dead page " \
+                f"would resurrect freed KV"
+            self._ref[p] += 1
+            self.total_shares += 1
+
     def free(self, pages: Iterable[int]) -> None:
         for p in pages:
             assert 0 < p < self.num_pages, p
-            assert p in self._allocated, \
+            assert p in self._ref, \
                 f"page {p} freed twice (or never allocated) — a double-free " \
                 f"hands one page to two requests and crosses their KV"
-            self._allocated.remove(p)
-            self._free.append(p)
+            self._ref[p] -= 1
             self.total_frees += 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._free.append(p)
+
+    def cow(self, seq: "SequencePages", idx: int) -> int:
+        """Copy-on-write split of ``seq.pages[idx]``: if the page is
+        shared, allocate a private copy (device contents copied via
+        ``page_copier``), swap it into the block table, and drop the
+        sequence's reference on the original — the other holders keep the
+        immutable original, the sequence gets a writable twin.  No-op on an
+        unshared page.  Returns the (possibly new) page id; may raise
+        :class:`OutOfPages` like any allocation."""
+        old = seq.pages[idx]
+        if self._ref.get(old, 0) <= 1:
+            return old
+        new = self.alloc()
+        if self.page_copier is not None:
+            self.page_copier(old, new)
+        seq.pages[idx] = new
+        self.free([old])
+        self.cow_copies += 1
+        return new
 
     def stats(self) -> dict:
+        """Allocator counters.  ``free_pages``/``usable_pages`` exclude the
+        reserved trash page consistently (``num_pages`` does not), so cache
+        occupancy ratios have a correct denominator; ``pages_per_request``
+        is the mean block-table length over live sequences — the
+        per-request share of the pool the aggregate counters hide."""
+        live = [len(s.pages) for s in self._seqs if s.pages]
         return {"num_pages": self.num_pages, "page_tokens": self.page_tokens,
+                "reserved_pages": self.reserved_pages,
+                "usable_pages": self.usable_pages,
                 "num_used": self.num_used, "num_free": self.num_free,
+                "free_pages": self.num_free,
+                "live_requests": len(live),
+                "pages_per_request": (sum(live) / len(live)) if live else 0.0,
+                "shared_pages": sum(1 for r in self._ref.values() if r > 1),
                 "peak_used": self.peak_used, "total_allocs": self.total_allocs,
-                "total_frees": self.total_frees}
+                "total_shares": self.total_shares,
+                "total_frees": self.total_frees,
+                "cow_copies": self.cow_copies}
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class SequencePages:
-    """One request's block table: ordered page ids covering 0..len-1."""
+    """One request's block table: ordered page ids covering 0..len-1.
+
+    Entries may be *shared* (prefix-cache hits: refcount > 1, read-only —
+    always a prefix of the table, since writes only ever append past the
+    cached cursor); :meth:`release`/:meth:`truncate` drop references, not
+    necessarily pages.  ``eq=False`` keeps identity hashing so the pool's
+    weak registry (``stats()["pages_per_request"]``) can track live
+    tables."""
 
     pool: PagedKVPool
     pages: List[int] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        self.pool._seqs.add(self)
 
     @property
     def capacity(self) -> int:
@@ -156,11 +281,21 @@ class SequencePages:
         pages this returns to the pool.  Pages stay ``m_r``-aligned whole
         tiles — truncation only ever drops whole pages, never splits one —
         and the frees go through the pool's double-free accounting like any
-        release.  Returns the number of pages freed."""
+        release (a shared trailing page just loses this table's reference).
+
+        A **shared** page is never truncated into: when ``tokens`` lands
+        mid-page and the kept tail page is shared, the next write at
+        position ``tokens`` would mutate it in place under the other
+        holders — so it is CoW-split first (the engine's normal flows keep
+        shared pages behind the cursor and this never fires, but the
+        rollback path must be safe against any caller).  Returns the number
+        of page references dropped."""
         keep = self.pool.pages_for(tokens)
         dropped = self.pages[keep:]
         self.pool.free(dropped)
         del self.pages[keep:]
+        if keep and tokens % self.pool.page_tokens:
+            self.pool.cow(self, keep - 1)
         return len(dropped)
 
     def block_row(self, max_pages: int) -> np.ndarray:
@@ -197,6 +332,25 @@ def prefill_view(caches, fresh):
         return {k: (v if k.endswith("_pages") else prefill_view(v, fresh[k]))
                 for k, v in caches.items()}
     return fresh
+
+
+def _copy_pages(caches, src, dst):
+    def rec(node):
+        if isinstance(node, dict):
+            return {k: (v.at[:, dst].set(v[:, src]) if k.endswith("_pages")
+                        else rec(v))
+                    for k, v in node.items()}
+        return node
+    return rec(caches)
+
+
+copy_pages = jax.jit(_copy_pages, donate_argnums=(0,))
+copy_pages.__doc__ = """Device-side page copy for copy-on-write splits:
+duplicate page ``src``'s contents into ``dst`` in every ``*_pages`` pool
+leaf ([G, P, T, Hkv, dh]; page dim = axis 1) of the cache pytree, leaving
+per-slot recurrent state untouched.  One jitted program per cache
+structure (the engine primes it at warmup), with the input donated so the
+pool is updated in place rather than doubled."""
 
 
 def merge_slot(caches, updated, slot: int):

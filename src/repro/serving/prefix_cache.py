@@ -1,0 +1,249 @@
+"""Layout-aware, page-granular prefix cache: refcounted page sharing,
+copy-on-write, and cache-backed preemption.
+
+KV pages are whole ``m_r``-aligned microkernel tiles (the paper's
+amortized-prepacking argument, §4.1, extended from weights to KV), which
+makes a full page a *self-contained, layout-keyed unit*: its bytes depend
+only on the model weights, the layout, and the exact token block it holds
+— never on which request computed it, what shared its batch, or when.
+That is exactly the property a vLLM-style prefix cache exploits: two
+requests whose prompts share a page-aligned prefix can share the pages
+byte-for-byte instead of prefilling twice.
+
+**Keying.**  Each cached full page is a node in a hash chain: its key is
+``H(parent_key || token_block)``, with the chain rooted in
+``H(layout m_r, page_tokens)``.  A lookup walks the prompt's full
+page-blocks from the root and stops at the first miss — the walk *is* the
+longest-cached-prefix query, radix-style (vLLM/aphrodite's block manager
+keyed by content instead of an explicit trie; branching falls out of the
+hashing, since two prompts diverging inside block ``i`` produce different
+child keys under the same parent).  Rooting the chain in the layout means
+a layout change (different ``m_r``, hence different page geometry and
+packed-tile contents) can never alias stale KV — the sharing invariants
+the whole stack leans on are spelled out in :mod:`repro.serving.kv_cache`.
+
+**Refcounts.**  The pool refcounts pages (``alloc`` = 1 ref); the cache
+holds one reference per cached page and a hit :meth:`lookup` adds one for
+the requester — so a page serving k requests while cached carries
+``k + 1`` refs, and ``free`` only returns it to the free list at zero.
+Pages whose *sole* reference is the cache's are **evictable**: eviction is
+LRU over those (childless nodes first, so chains shrink from the leaves),
+and the pool calls :meth:`evict` itself when its free list runs dry
+(``pool.reclaimer``).  Cached pages are therefore always reclaimable under
+pressure, which preserves the scheduler's termination proof — the "a solo
+request fits the pool" invariant counts ``pool.num_available``, free
+pages plus evictable ones.
+
+**Hit cursor.**  A hit is capped at ``prompt_len - 1`` tokens: the last
+prompt position's *logits* feed the first pick, so at least one position
+must be recomputed even when every page is cached (the standard vLLM
+cap).  For a fully-cached, page-aligned prompt the cursor therefore lands
+*inside* the last shared page — the one place a requester must write into
+a shared page — and the scheduler CoW-splits that page before prefill
+touches it (partially-filled last pages copy-on-write on divergence).
+
+**Insertion.**  Prefill writes newly-completed full pages into the cache
+as the cursor advances (chunked) or at prefill completion (monolithic);
+preemption *releases pages into the cache instead of freeing them* —
+generated tokens fold into the prompt first, so the fold-extended prompt
+keys the written full pages and re-admission recomputes only the uncached
+suffix: at most the partial last page plus the one never-written pick.
+The PR-2 recompute-everything fold path becomes a cache hit.
+
+Host-side only: this module never touches device arrays (the engine owns
+the cache pytree and installs ``pool.page_copier`` for CoW).  Lookups and
+inserts re-hash the chain from the root — O(pages) blake2 per call, noise
+next to a forward pass at serving page counts.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.serving.kv_cache import PagedKVPool
+
+__all__ = ["PrefixCache"]
+
+
+class _Node:
+    """One cached full page: the chain key, its parent's key (for child
+    accounting on eviction), the page id, and an LRU tick."""
+
+    __slots__ = ("key", "parent", "page", "nchildren", "tick")
+
+    def __init__(self, key: bytes, parent: bytes, page: int, tick: int):
+        self.key = key
+        self.parent = parent
+        self.page = page
+        self.nchildren = 0
+        self.tick = tick
+
+
+class PrefixCache:
+    """Page-granular prefix cache over a :class:`PagedKVPool`.
+
+    Registers itself as the pool's ``reclaimer`` so allocation pressure
+    evicts LRU cache-only pages automatically.  All methods are host-side
+    bookkeeping; the caller owns device KV (which is why sharing is sound:
+    cached page *contents* are immutable once full).
+    """
+
+    def __init__(self, pool: PagedKVPool, *, layout_key=()):
+        self.pool = pool
+        self.page_tokens = pool.page_tokens
+        # the chain root folds the layout into every key: a page cached
+        # under one (m_r, page_tokens) geometry can never be returned for
+        # another — a layout change invalidates the whole cache by design
+        h = hashlib.blake2b(digest_size=16)
+        h.update(repr(("repro-prefix-cache", tuple(layout_key),
+                       pool.page_tokens)).encode())
+        self._root = h.digest()
+        self._nodes: Dict[bytes, _Node] = {}
+        self._tick = 0
+        # counters (cumulative; surfaced via Engine.stats()["prefix_cache"])
+        self.lookups = 0
+        self.hits = 0
+        self.hit_tokens = 0
+        self.hit_pages = 0
+        self.inserted_pages = 0
+        self.insert_dups = 0
+        self.evictions = 0
+        pool.reclaimer = self
+
+    # ------------------------------------------------------------------
+    def _child_key(self, parent: bytes, block: np.ndarray) -> bytes:
+        h = hashlib.blake2b(digest_size=16)
+        h.update(parent)
+        h.update(np.ascontiguousarray(block, np.int32).tobytes())
+        return h.digest()
+
+    def _touch(self, node: _Node) -> None:
+        self._tick += 1
+        node.tick = self._tick
+
+    # ------------------------------------------------------------------
+    def lookup(self, prompt: np.ndarray) -> Tuple[List[int], int]:
+        """Longest cached page-chain prefix of ``prompt``.
+
+        Returns ``(pages, hit_tokens)``: the matched page ids (one pool
+        reference each transferred to the caller — read-only until CoW)
+        and the hit cursor, capped at ``prompt_len - 1`` (the final
+        position's logits must be recomputed).  ``([], 0)`` on a miss.
+        The caller keeps *all* matched pages even under the cap: position
+        ``prompt_len - 1`` then lands inside the last one, which it must
+        CoW-split before writing."""
+        self.lookups += 1
+        prompt = np.asarray(prompt, np.int32)
+        size = int(prompt.shape[0])
+        t = self.page_tokens
+        pages: List[int] = []
+        h = self._root
+        for i in range(size // t):
+            key = self._child_key(h, prompt[i * t:(i + 1) * t])
+            node = self._nodes.get(key)
+            if node is None:
+                break
+            self._touch(node)
+            pages.append(node.page)
+            h = key
+        if not pages:
+            return [], 0
+        hit = min(len(pages) * t, size - 1)
+        self.pool.share(pages)
+        self.hits += 1
+        self.hit_tokens += hit
+        self.hit_pages += len(pages)
+        return pages, hit
+
+    def insert(self, prompt: np.ndarray, pages: List[int], upto: int) -> int:
+        """Register the full pages covering ``prompt[:upto]`` (``pages`` is
+        the owning request's block table — page ``i`` must hold the KV of
+        token block ``i``).  Only whole pages are cached: a partial tail
+        stays private to its writer.  Existing nodes are refreshed (LRU)
+        and never replaced — if another request prefilled the same content
+        into a different page first, the cache keeps the incumbent and the
+        duplicate stays private (``insert_dups``).  New nodes take their
+        own pool reference, so cached pages survive the inserter's release.
+        Returns the number of pages newly cached."""
+        prompt = np.asarray(prompt, np.int32)
+        t = self.page_tokens
+        n = min(min(upto, int(prompt.shape[0])) // t, len(pages))
+        h = self._root
+        new = 0
+        for i in range(n):
+            key = self._child_key(h, prompt[i * t:(i + 1) * t])
+            node = self._nodes.get(key)
+            if node is None:
+                self._tick += 1
+                node = _Node(key, h, pages[i], self._tick)
+                self._nodes[key] = node
+                parent = self._nodes.get(h)
+                if parent is not None:
+                    parent.nchildren += 1
+                self.pool.share([pages[i]])
+                self.inserted_pages += 1
+                new += 1
+            else:
+                if node.page != pages[i]:
+                    self.insert_dups += 1
+                self._touch(node)
+            h = key
+        return new
+
+    # ------------------------------------------------------------------
+    # eviction (also the pool's reclaimer interface)
+    # ------------------------------------------------------------------
+    def evictable(self) -> int:
+        """Cached pages whose only reference is the cache's — the pages
+        :meth:`evict` may free right now (a page serving a live request
+        carries that request's reference too and is pinned)."""
+        return sum(1 for n in self._nodes.values()
+                   if self.pool.ref(n.page) == 1)
+
+    def evict(self, want: int) -> int:
+        """Free up to ``want`` cache-only pages, least-recently-used first
+        with childless nodes preferred (chains shrink from the leaves; a
+        mid-chain eviction merely strands its stale descendants, which age
+        out by the same LRU).  Candidates are scanned once per call, not
+        once per page — refcounts cannot change mid-evict (only cache refs
+        are dropped here), and the child-count ordering going slightly
+        stale within a batch only shifts preference, never correctness.
+        Returns the number actually freed."""
+        cands = sorted((n for n in self._nodes.values()
+                        if self.pool.ref(n.page) == 1),
+                       key=lambda n: (n.nchildren > 0, n.tick))
+        freed = 0
+        for node in cands:
+            if freed >= want:
+                break
+            del self._nodes[node.key]
+            parent = self._nodes.get(node.parent)
+            if parent is not None:
+                parent.nchildren -= 1
+            self.pool.free([node.page])
+            self.evictions += 1
+            freed += 1
+        return freed
+
+    def clear(self) -> int:
+        """Evict everything evictable (e.g. after a drain, to return the
+        pool to a balanced state for accounting)."""
+        return self.evict(len(self._nodes))
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        return {"entries": len(self._nodes),
+                "evictable": self.evictable(),
+                "lookups": self.lookups, "hits": self.hits,
+                "hit_rate": self.hits / max(1, self.lookups),
+                "hit_tokens": self.hit_tokens, "hit_pages": self.hit_pages,
+                "inserted_pages": self.inserted_pages,
+                "insert_dups": self.insert_dups,
+                "evictions": self.evictions,
+                "shared_pages": sum(
+                    1 for n in self._nodes.values()
+                    if self.pool.is_shared(n.page)),
+                "cow_copies": self.pool.cow_copies}

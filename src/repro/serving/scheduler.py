@@ -70,6 +70,23 @@ always hand a solo request the entire pool.  The oldest request therefore
 always makes progress, and drains terminate even when the pool is far
 smaller than the sum of reservations (see the OutOfPages-under-load test).
 
+With a **prefix cache** attached (PR 5, :mod:`repro.serving.prefix_cache`),
+admission starts prefill at the longest cached prefix of the prompt:
+matched pages are *shared* into the block table (refcounted, read-only)
+and ``prefill_cursor``/``len`` begin at the hit cursor — a fully-cached
+prompt recomputes only its final position (whose logits the first pick
+needs), CoW-splitting the shared page that position writes into.
+Preemption then **releases pages into the cache instead of freeing them**:
+generated tokens fold into the prompt first, the written full pages are
+inserted under the fold-extended prompt's keys, and re-admission finds
+them — recompute covers only the uncached suffix (at most the partial
+last page plus the never-written final pick) instead of the whole
+sequence, turning the PR-2 fold path into a cache hit.  Cached pages are
+always reclaimable (the pool evicts LRU cache-only pages when its free
+list runs dry, and availability checks count ``pool.num_available``), so
+every preemption/termination argument above survives the cache holding
+pages.
+
 A note on the token budget: the engine's step *shape* is fixed at
 ``(slots, chunk_tokens)`` whenever any slot prefills (the paper's
 fixed-shape-grid philosophy: one compiled shape, occupancy varies via
@@ -130,6 +147,14 @@ class Request:
     prefill_cursor: int = 0
     num_pauses: int = 0
     chunk_steps: int = 0          # prefill steps run (monolithic: per call)
+    # prefix-cache accounting: out_tokens watermark at the last admission
+    # (a resume's "generated since" denominator) and whether a reclaim
+    # reset the cursor (its resume legitimately recomputes never-cached
+    # prefill work, so the resume-recompute bound does not apply)
+    out_at_admit: int = 0
+    reclaimed: bool = False
+    cached_upto: int = 0          # tokens whose pages entered the cache at
+                                  # the last preempt (resume-eviction probe)
 
     @property
     def prompt_len(self) -> int:
@@ -158,7 +183,8 @@ class Request:
 class Scheduler:
     def __init__(self, max_slots: int, pool: PagedKVPool, max_len: int, *,
                  eager: bool = False, watermark_pages: int = 1,
-                 chunk_tokens: Optional[int] = None, chunk_align: int = 1):
+                 chunk_tokens: Optional[int] = None, chunk_align: int = 1,
+                 prefix_cache=None):
         self.max_slots = max_slots
         self.pool = pool
         self.max_len = max_len
@@ -166,6 +192,10 @@ class Scheduler:
         self.watermark_pages = watermark_pages
         self.chunk_tokens = chunk_tokens       # None = monolithic prefill
         self.chunk_align = max(1, chunk_align)  # layout m_r: chunks stay tiles
+        self.prefix_cache = prefix_cache       # None = no sharing (PR-2/3/4)
+        assert prefix_cache is None or not eager, \
+            "prefix cache needs lazy allocation: eager reservation books " \
+            "full lifetimes, which shared (refcounted) pages would double-count"
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}          # slot -> request
         self._free_slots: List[int] = list(range(max_slots - 1, -1, -1))
@@ -175,6 +205,14 @@ class Scheduler:
         self.prefill_stall_steps = 0           # steps where a chunk got < ask
         self.spec_grow_fallbacks = 0           # speculative page asks shed
         self.peak_running = 0
+        # preempt-resume accounting under the prefix cache: scalar totals
+        # for stats() plus a bounded window of per-event records (the
+        # cache contract asserted by tests/bench: recompute <=
+        # generated_since + one partial page, unless a reclaim dropped the
+        # pages or pool-pressure eviction beat the resume to them)
+        self.resumes = 0
+        self.resume_recompute_tokens = 0
+        self.resume_events: Deque[dict] = deque(maxlen=256)
 
     # ------------------------------------------------------------------
     @property
@@ -190,11 +228,12 @@ class Scheduler:
             f"request {req.rid}: KV budget {req.kv_budget} (prompt " \
             f"{req.prompt_len} + max_new {req.max_new} - 1) exceeds " \
             f"engine max_len {self.max_len}"
-        assert self.pool.pages_for(req.kv_budget) <= self.pool.num_pages - 1, \
+        assert self.pool.pages_for(req.kv_budget) <= self.pool.usable_pages, \
             f"request {req.rid}: KV budget {req.kv_budget} can never fit " \
-            f"the pool ({self.pool.num_pages - 1} usable pages of " \
+            f"the pool ({self.pool.usable_pages} usable pages of " \
             f"{self.pool.page_tokens} tokens) — it could neither run eagerly " \
-            f"nor survive preemption"
+            f"nor survive preemption (cached pages don't help: they are " \
+            f"reclaimable, not extra capacity)"
         req.status = "waiting"
         # insert in arrival order (stable: FCFS among equal arrivals), but
         # never ahead of preempted requests — they resume first regardless
@@ -205,16 +244,21 @@ class Scheduler:
             i += 1
         self.waiting.insert(i, req)
 
-    def admit(self, now: Optional[float] = None) -> List[Request]:
+    def admit(self, now: Optional[float] = None,
+              limit: Optional[int] = None) -> List[Request]:
         """Admit waiting requests (FCFS) while a slot is free and the pool
         has pages for the head's prompt plus the watermark (``eager=True``:
         for its full KV budget; chunked: for its *next chunk* only — the
         rest of the prompt is paged in as the cursor advances).  Returns the
         newly-admitted requests; the engine prefills them (monolithic) or
         streams them chunk by chunk (``status == "prefilling"``).  ``now``
-        gates admission by arrival time (benchmark trace replay)."""
+        gates admission by arrival time (benchmark trace replay); ``limit``
+        caps this call's admissions — the monolithic engine admits one at a
+        time so each admission's prefill lands in the prefix cache before
+        the next admission's lookup (same-step arrivals then share)."""
         admitted = []
         while (self.waiting and self._free_slots
+               and (limit is None or len(admitted) < limit)
                and (now is None or self.waiting[0].arrival <= now)):
             if not self._pages_available(self.waiting[0]):
                 # with nothing running, nobody will ever free pages on its
@@ -227,11 +271,32 @@ class Scheduler:
                 break
             req = self.waiting.popleft()
             req.slot = self._free_slots.pop()
+            was_preempted, was_reclaimed = req.preempted, req.reclaimed
             req.preempted = False
+            req.reclaimed = False
             req.admit_seq = self._admit_counter
             self._admit_counter += 1
             if req.pages is None:        # a paused request keeps its pages
                 req.pages = SequencePages(self.pool)
+                if self.prefix_cache is not None:
+                    self._acquire_prefix(req)
+                    if was_preempted:
+                        recompute = req.prompt_len - req.prefill_cursor
+                        self.resumes += 1
+                        self.resume_recompute_tokens += recompute
+                        self.resume_events.append({
+                            "rid": req.rid,
+                            "recompute": recompute,
+                            "generated_since": (len(req.out_tokens)
+                                                - req.out_at_admit),
+                            "reclaimed": was_reclaimed,
+                            # pool pressure may LRU-evict a victim's cached
+                            # pages before it resumes — the bound then
+                            # legitimately does not apply (output identity
+                            # always does)
+                            "evicted": req.prefill_cursor < min(
+                                req.cached_upto, req.prompt_len - 1)})
+            req.out_at_admit = len(req.out_tokens)
             if self.chunk_tokens is not None:
                 # chunked: pages arrive with each chunk (plan_chunks); a
                 # resumed pause continues from its cursor, never from 0
@@ -251,7 +316,44 @@ class Scheduler:
         self.peak_running = max(self.peak_running, len(self.running))
         return admitted
 
+    def _acquire_prefix(self, req: Request) -> None:
+        """Start ``req`` at its longest cached prefix: matched pages are
+        shared into the (empty) block table and the prefill cursor jumps to
+        the hit — a fully-cached prompt recomputes only its final position.
+        When the capped cursor lands *inside* the last shared page (only
+        the fully-cached case; full-page hits leave the cursor on a page
+        boundary), that page is CoW-split now, before prefill writes the
+        final position into it — no shared page is ever written in place.
+        If even the CoW copy cannot be allocated, the tail page is handed
+        back instead and its block re-prefills from the aligned boundary —
+        a pure fallback, never a correctness difference."""
+        assert not req.pages.pages and req.prefill_cursor == 0
+        pages, hit = self.prefix_cache.lookup(req.prompt)
+        if not pages:
+            return
+        req.pages.pages = pages
+        if hit % self.pool.page_tokens:
+            try:
+                self.pool.cow(req.pages, len(pages) - 1)
+            except OutOfPages:
+                self.pool.free([req.pages.pages.pop()])
+                hit = len(req.pages.pages) * self.pool.page_tokens
+        req.prefill_cursor = hit
+        req.len = hit
+
     def _pages_available(self, req: Request) -> bool:
+        # num_available counts free pages plus cache-evictable ones (alloc
+        # reclaims the latter on demand); the need is computed as if the
+        # lookup misses.  Monolithic: a hit shrinks the need by exactly the
+        # pages sharing pins (plus at most one CoW page, covered because
+        # CoW only fires when >= 1 page was pinned), so the check stays
+        # sufficient.  Chunked: the need covers the *next chunk* only and
+        # does not shrink with the hit, while the hit may pin
+        # previously-evictable pages — the watermark headroom can erode by
+        # the hit size in the worst case.  That costs at most an avoidable
+        # displacement on a later grow() (plan_chunks stalls, grow pauses/
+        # preempts — all handled paths); admission itself stays safe
+        # because the chunk's own pages were counted before any pinning.
         if self.eager:
             return self.pool.can_fit(req.kv_budget)
         # the watermark keeps headroom for already-running requests to grow;
@@ -263,9 +365,9 @@ class Scheduler:
             first = min(req.prefill_cursor + self.chunk_tokens,
                         req.prompt_len)
             need = max(0, self.pool.pages_for(first) - held)
-            return need + reserve <= self.pool.num_free
+            return need + reserve <= self.pool.num_available
         return self.pool.pages_for(req.prompt_len) + reserve \
-            <= self.pool.num_free
+            <= self.pool.num_available
 
     def plan_chunks(self, budget: int) -> Dict[int, int]:
         """Assign this step's prompt chunk to every PREFILLING slot, oldest
@@ -367,7 +469,7 @@ class Scheduler:
                            - len(req.pages.pages))
                 if need == 0:
                     continue     # slack in the held pages covers the ask
-                if need <= self.pool.num_free \
+                if need <= self.pool.num_available \
                         - self._mandatory_growth_pages(req):
                     try:
                         req.pages.ensure(req.len + n)
@@ -433,9 +535,20 @@ class Scheduler:
         if not holders:
             return False
         victim = max(holders, key=lambda r: r.admit_seq)
-        victim.pages.release()
+        if self.prefix_cache is not None:
+            # a reclaim is still a release-into-the-cache: the victim's
+            # completed chunks stay findable (and instantly evictable if
+            # the pressure that forced this reclaim needs them)
+            self.prefix_cache.insert(victim.prompt, victim.pages.pages,
+                                     min(victim.prefill_cursor,
+                                         victim.prompt_len))
+            victim.pages.release()
+            victim.pages = None      # re-admission re-looks-up the prefix
+        else:
+            victim.pages.release()
         victim.prefill_cursor = 0
         victim.len = 0
+        victim.reclaimed = True
         victim.num_preemptions += 1
         self.num_preemptions += 1
         return True
@@ -444,15 +557,18 @@ class Scheduler:
         """Release everything and requeue at the front for recomputation:
         the generated-so-far tokens are folded into the prompt, so the
         re-admission prefill recomputes the KV the release threw away and
-        the next pick continues the sequence exactly where it stopped."""
+        the next pick continues the sequence exactly where it stopped.
+
+        With a prefix cache, "release" means **release into the cache**:
+        the fold runs first so the extended prompt keys the written full
+        pages, those are inserted (the cache takes its own references), and
+        only then are the request's references dropped — full pages survive
+        for the re-admission lookup, the partial tail page returns to the
+        free list, and the resume recomputes just the uncached suffix."""
         assert self.running.get(req.slot) is req
         del self.running[req.slot]
-        req.pages.release()
-        req.pages = None
         self._free_slots.append(req.slot)
         req.slot = -1
-        req.len = 0
-        req.prefill_cursor = 0       # pages gone: re-prefill from the start
         # fold only the tokens generated since the last admission — earlier
         # preemptions already folded their prefix (re-folding would duplicate
         # it and silently corrupt the recompute context)
@@ -461,6 +577,17 @@ class Scheduler:
             req.prompt = np.concatenate(
                 [req.prompt, np.asarray(fresh, np.int32)])
             req.folded = len(req.out_tokens)
+        if self.prefix_cache is not None:
+            # req.len positions hold committed KV (speculative rollbacks
+            # already truncated rejected drafts, so nothing stale can leak)
+            upto = min(req.len, req.prompt_len)
+            self.prefix_cache.insert(req.prompt, req.pages.pages, upto)
+            req.cached_upto = (upto // self.pool.page_tokens
+                               * self.pool.page_tokens)
+        req.pages.release()
+        req.pages = None
+        req.len = 0
+        req.prefill_cursor = 0       # pages gone: re-prefill from the start
         req.status = "waiting"
         req.preempted = True
         req.num_preemptions += 1
@@ -496,4 +623,6 @@ class Scheduler:
             "prefill_stall_steps": self.prefill_stall_steps,
             "spec_grow_fallbacks": self.spec_grow_fallbacks,
             "chunk_tokens": self.chunk_tokens,
+            "resumes": self.resumes,
+            "resume_recompute_tokens": self.resume_recompute_tokens,
         }

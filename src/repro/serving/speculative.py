@@ -61,9 +61,15 @@ block table back to the accepted length
 (:meth:`~repro.serving.kv_cache.SequencePages.truncate`) — whole trailing
 pages return to the pool through the double-free-checked allocator, stale
 positions inside the kept last page are masked by ``lens + new_counts``
-until the next write overwrites them.  Preemption composes for free:
-``out_tokens`` only ever holds accepted tokens, so a fold after a verify
-step can never leak a rejected draft into the recompute prompt.
+until the next write overwrites them.  Under the prefix cache the same
+call upholds the sharing invariants: a shared trailing page merely loses
+this request's reference, and a shared *kept* tail page is CoW-split
+before the next verify step writes into it — rollback can never mutate a
+page another request (or the cache) still reads.  Preemption composes for
+free: ``out_tokens`` only ever holds accepted tokens, so a fold after a
+verify step can never leak a rejected draft into the recompute prompt —
+nor, for the same reason, can a rejected draft ever be inserted into the
+prefix cache (preemption inserts only committed-KV pages).
 """
 
 from __future__ import annotations

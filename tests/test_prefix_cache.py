@@ -1,0 +1,470 @@
+"""Layout-aware prefix cache: refcounted sharing, copy-on-write,
+cache-backed preemption (PR 5).
+
+Covers the sharing subsystem's contracts:
+  - pool refcounts: ``share`` adds references, ``free`` drops them, pages
+    return to the free list only at refcount zero, and double-free checks
+    extend to shared pages (over-freeing fails loudly);
+  - copy-on-write: ``cow`` splits a shared page (device copy via the
+    installed ``page_copier``), ``truncate`` never truncates *into* a
+    shared page (it CoW-splits the kept tail first);
+  - the hash-chain cache: longest-prefix lookup, the ``prompt_len - 1``
+    hit cap, layout-keyed roots (no cross-layout aliasing), LRU eviction
+    of cache-only pages under pool pressure, in-use pages pinned;
+  - allocator-under-sharing property: any interleaving of
+    admit/share/grow/truncate/preempt/evict keeps refcounts >= 0, keeps
+    alloc+share/free balanced, and never writes a shared page in place;
+  - engine integration: cache-on outputs are token-identical to cache-off
+    (greedy + sampled, monolithic + chunked, spec-on) at <= 0.5x the
+    prefill tokens on a shared-prefix trace; a preempt-resume recomputes
+    only the uncached suffix; zero new XLA traces after ``warmup()``;
+  - the stats satellite: ``pages_per_request`` and the reserved-page-
+    excluding ``free_pages``/``usable_pages`` denominators.
+"""
+
+import random
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import RunConfig, ShapeSpec, get_config, reduced_config
+from repro.models.model import build_model
+from repro.serving.engine import Engine
+from repro.serving.kv_cache import OutOfPages, PagedKVPool, SequencePages
+from repro.serving.prefix_cache import PrefixCache
+
+RUN = RunConfig(param_dtype="float32", compute_dtype="float32", remat=False)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = reduced_config(get_config("smollm2-135m"), layers=2)
+    shape = ShapeSpec("serve", 96, 3, "decode")
+    m = build_model(cfg, RUN, shape)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _tok(n, seed=0):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (n,),
+                                         0, 64), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# pool refcounting + CoW
+# ---------------------------------------------------------------------------
+
+def test_refcount_share_free_balance():
+    pool = PagedKVPool(1 + 4, 8)
+    p = pool.alloc()
+    assert pool.ref(p) == 1 and not pool.is_shared(p)
+    pool.share([p, p])
+    assert pool.ref(p) == 3 and pool.is_shared(p)
+    pool.free([p])
+    assert pool.ref(p) == 2 and pool.num_used == 1   # still allocated
+    pool.free([p, p])
+    assert pool.ref(p) == 0 and pool.num_used == 0   # now actually free
+    with pytest.raises(AssertionError):
+        pool.free([p])                               # over-free fails loudly
+    with pytest.raises(AssertionError):
+        pool.share([p])                              # sharing a dead page too
+    assert pool.total_allocs + pool.total_shares == pool.total_frees == 3
+
+
+def test_cow_splits_shared_page_only():
+    pool = PagedKVPool(1 + 4, 8)
+    copies = []
+    pool.page_copier = lambda src, dst: copies.append((src, dst))
+    seq = SequencePages(pool)
+    seq.ensure(8)
+    [p] = seq.pages
+    assert pool.cow(seq, 0) == p and not copies      # unshared: no-op
+    pool.share([p])                                  # someone else holds it
+    q = pool.cow(seq, 0)
+    assert q != p and seq.pages == [q]
+    assert copies == [(p, q)]                        # device contents copied
+    assert pool.ref(p) == 1 and pool.ref(q) == 1     # split: one ref each
+    assert pool.cow_copies == 1
+    pool.free([p])
+    seq.release()
+    assert pool.num_used == 0
+    assert pool.total_allocs + pool.total_shares == pool.total_frees
+
+
+def test_truncate_never_truncates_into_shared_page():
+    pool = PagedKVPool(1 + 6, 8)
+    pool.page_copier = lambda src, dst: None
+    seq = SequencePages(pool)
+    seq.ensure(3 * 8)
+    tail = seq.pages[-1]
+    other = list(seq.pages)
+    pool.share(other)                                # all three shared
+    # aligned truncation only drops trailing refs — kept pages untouched
+    before = list(seq.pages)
+    assert seq.truncate(16) == 1
+    assert seq.pages == before[:2] and pool.ref(tail) == 1
+    # unaligned truncation lands mid-page on a shared page: CoW-split
+    kept = seq.pages[1]
+    assert seq.truncate(12) == 0                     # no whole page dropped
+    assert seq.pages[0] == before[0] and seq.pages[1] != kept
+    assert pool.ref(kept) == 1                       # other holder keeps it
+    assert pool.cow_copies == 1
+    seq.release()
+    pool.free(other)
+    assert pool.num_used == 0
+    assert pool.total_allocs + pool.total_shares == pool.total_frees
+
+
+def test_pool_stats_satellites():
+    """``pages_per_request`` and the reserved-page-excluding denominators
+    (the trash page must never inflate capacity ratios)."""
+    pool = PagedKVPool(1 + 8, 8)
+    st_ = pool.stats()
+    assert st_["usable_pages"] == 8 and st_["reserved_pages"] == 1
+    assert st_["free_pages"] == 8 == st_["num_free"]
+    assert st_["pages_per_request"] == 0.0 and st_["live_requests"] == 0
+    a, b = SequencePages(pool), SequencePages(pool)
+    a.ensure(24)                                     # 3 pages
+    b.ensure(8)                                      # 1 page
+    st_ = pool.stats()
+    assert st_["live_requests"] == 2
+    assert st_["pages_per_request"] == pytest.approx(2.0)
+    assert st_["free_pages"] == 4                    # 8 usable - 4 held
+    pool.share([a.pages[0]])
+    assert pool.stats()["shared_pages"] == 1
+    pool.free([a.pages[0]])
+    a.release()
+    b.release()
+    st_ = pool.stats()
+    assert st_["free_pages"] == st_["usable_pages"] == 8
+
+
+# ---------------------------------------------------------------------------
+# the hash-chain cache
+# ---------------------------------------------------------------------------
+
+def test_lookup_walks_longest_prefix_and_caps_at_last_token():
+    pool = PagedKVPool(1 + 8, 8)
+    cache = PrefixCache(pool, layout_key=(4,))
+    prompt = _tok(24)                                # 3 exact pages
+    seq = SequencePages(pool)
+    seq.ensure(24)
+    cache.insert(prompt, seq.pages, 24)
+    assert cache.stats()["entries"] == 3
+
+    # a diverging prompt matches only the shared blocks
+    div = prompt.copy()
+    div[20] += 1
+    pages, hit = cache.lookup(div)
+    assert hit == 16 and pages == seq.pages[:2]
+    pool.free(pages)                                 # give the refs back
+
+    # the exact prompt is capped at L-1: all pages shared, cursor mid-page
+    pages, hit = cache.lookup(prompt)
+    assert hit == 23 and pages == seq.pages
+    pool.free(pages)
+
+    # a longer prompt with the cached prefix hits all 3 full pages
+    longer = np.concatenate([prompt, _tok(5, seed=9)])
+    pages, hit = cache.lookup(longer)
+    assert hit == 24 and pages == seq.pages
+    pool.free(pages)
+    seq.release()
+    cache.clear()
+    assert pool.num_used == 0
+    assert pool.total_allocs + pool.total_shares == pool.total_frees
+
+
+def test_layout_key_roots_the_chain():
+    """The same token content under a different layout key must miss — a
+    layout change can never alias stale KV."""
+    pool = PagedKVPool(1 + 8, 8)
+    a = PrefixCache(pool, layout_key=(4,))
+    b = PrefixCache(pool, layout_key=(8,))
+    prompt = _tok(16)
+    seq = SequencePages(pool)
+    seq.ensure(16)
+    a.insert(prompt, seq.pages, 16)
+    assert b.lookup(prompt) == ([], 0)
+    pages, hit = a.lookup(prompt)
+    assert hit == 15 and len(pages) == 2
+    pool.free(pages)
+    seq.release()
+    a.clear()
+    assert pool.num_used == 0
+
+
+def test_eviction_lru_under_pool_pressure_pins_in_use_pages():
+    pool = PagedKVPool(1 + 4, 8)
+    cache = PrefixCache(pool, layout_key=(4,))
+    old, new = _tok(8, seed=1), _tok(8, seed=2)
+    s1, s2 = SequencePages(pool), SequencePages(pool)
+    s1.ensure(8)
+    cache.insert(old, s1.pages, 8)
+    pinned = s1.pages[0]                             # s1 still holds it
+    s2.ensure(8)
+    cache.insert(new, s2.pages, 8)
+    s2.release()                                     # cache-only: evictable
+    assert cache.evictable() == 1 and pool.num_available == 3
+    # pool pressure: allocating all remaining pages auto-evicts `new`
+    s3 = SequencePages(pool)
+    s3.ensure(3 * 8)
+    assert cache.evictions == 1
+    assert cache.lookup(new) == ([], 0)              # LRU victim gone
+    assert pool.ref(pinned) == 2                     # in-use page survived
+    pages, hit = cache.lookup(old)
+    assert hit == 7 and pages == [pinned]
+    pool.free(pages)
+    # with everything pinned or handed out, exhaustion still fails loudly
+    with pytest.raises(OutOfPages):
+        s3.ensure(4 * 8)
+    s1.release()
+    s3.release()
+    cache.clear()
+    assert pool.num_used == 0
+    assert pool.total_allocs + pool.total_shares == pool.total_frees
+
+
+# ---------------------------------------------------------------------------
+# allocator-under-sharing property (satellite)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), usable=st.integers(4, 12))
+def test_property_sharing_interleaving_keeps_invariants(seed, usable):
+    """Any interleaving of admit / share(lookup+insert) / grow / truncate /
+    preempt-into-cache / evict keeps refcounts >= 0 (over-free asserts
+    inside the pool), keeps allocs+shares balanced against frees once
+    everything is released, and never writes a shared page in place (every
+    simulated KV write asserts its target page has refcount 1)."""
+    rng = random.Random(seed)
+    t = 8
+    pool = PagedKVPool(1 + usable, t)
+    pool.page_copier = lambda src, dst: None
+    cache = PrefixCache(pool, layout_key=(4,))
+
+    def write(seq, pos):
+        # the invariant under test: the page a position is written into is
+        # never shared (prefill/decode writes follow CoW or fresh pages)
+        page = seq.pages[pos // t]
+        assert pool.ref(page) == 1, \
+            f"write at {pos} would hit shared page {page}"
+
+    live = []      # [prompt, seq, len]  (len = tokens with simulated KV)
+
+    def admit():
+        plen = rng.randrange(2, 3 * t)
+        if rng.random() < 0.6 and live:              # shared-prefix arrival
+            donor = rng.choice(live)[0]
+            cut = rng.randrange(1, len(donor) + 1)
+            prompt = np.concatenate([donor[:cut], _tok(plen, seed=rng.
+                                                       randrange(999))])[:plen]
+        else:
+            prompt = _tok(plen, seed=rng.randrange(999))
+        seq = SequencePages(pool)
+        pages, hit = cache.lookup(prompt)
+        seq.pages = pages
+        if hit % t:
+            try:
+                pool.cow(seq, len(pages) - 1)
+            except OutOfPages:
+                pool.free([seq.pages.pop()])
+                hit = len(seq.pages) * t
+        try:
+            seq.ensure(plen)
+        except OutOfPages:                           # admission blocked
+            seq.release()
+            return
+        for pos in range(hit, plen):                 # prefill the suffix
+            write(seq, pos)
+        cache.insert(prompt, seq.pages, plen)
+        live.append([prompt, seq, plen])
+
+    def grow():
+        if not live:
+            return
+        r = rng.choice(live)
+        try:
+            r[1].ensure(r[2] + 1)
+        except OutOfPages:
+            return
+        if r[2] < len(r[0]):                         # keep prompt keys honest
+            r[0] = np.concatenate([r[0], _tok(1, seed=rng.randrange(999))])
+        write(r[1], r[2])
+        r[2] += 1
+
+    def truncate():
+        if not live:
+            return
+        r = rng.choice(live)
+        if r[2] <= 1:
+            return
+        new_len = rng.randrange(1, r[2])
+        try:
+            r[1].truncate(new_len)
+        except OutOfPages:                           # CoW split had no page
+            return
+        r[2] = new_len
+
+    def preempt():
+        if not live:
+            return
+        r = live.pop(rng.randrange(len(live)))
+        cache.insert(r[0], r[1].pages, min(r[2], len(r[0])))
+        r[1].release()
+
+    def evict():
+        cache.evict(rng.randrange(1, 3))
+
+    ops = [admit, grow, truncate, preempt, evict]
+    for _ in range(60):
+        rng.choice(ops)()
+        assert all(v >= 1 for v in pool._ref.values())
+        assert pool.num_used + pool.num_free == pool.usable_pages
+
+    for _, seq, _ in live:
+        seq.release()
+    cache.clear()
+    assert cache.evictable() == 0
+    assert pool.num_used == 0
+    assert pool.total_allocs + pool.total_shares == pool.total_frees
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+def _shared_prefix_trace(cfg, n=6, sys_tokens=40):
+    key = jax.random.PRNGKey(3)
+    sysp = np.asarray(jax.random.randint(key, (sys_tokens,), 0, cfg.vocab))
+    reqs = []
+    for i in range(n):
+        sfx = np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                            (3 + i % 3,), 0, cfg.vocab))
+        reqs.append((np.concatenate([sysp, sfx]), 5 + i % 3))
+    return reqs
+
+
+def _drain_staggered(eng, reqs, *, greedy=True, seed=0):
+    for i, (p, n) in enumerate(reqs):
+        eng.add_request(p, n, arrival=float(2 * i))
+    clock, fin = 0.0, {}
+    while eng.scheduler.has_work:
+        fin.update((r.rid, r.out_tokens)
+                   for r in eng.step(now=clock, greedy=greedy, seed=seed))
+        clock += 1.0
+    return [fin[i] for i in sorted(fin)]
+
+
+@pytest.mark.parametrize("greedy", [True, False], ids=["greedy", "sampled"])
+@pytest.mark.parametrize("kw", [dict(), dict(chunk_tokens=16),
+                                dict(spec_tokens=2)],
+                         ids=["monolithic", "chunked", "spec"])
+def test_cache_on_token_identical_and_halves_prefill(smollm, greedy, kw):
+    """The tentpole contract: cache-on outputs are bit-identical to
+    cache-off — both prefill policies, speculation on, greedy and sampled —
+    at <= 0.5x the prefill tokens on a shared-system-prompt trace, with
+    the pool balanced once the cache is cleared."""
+    cfg, m, params = smollm
+    reqs = _shared_prefix_trace(cfg)
+    base = Engine(m, params, max_slots=3, page_tokens=16)
+    want = _drain_staggered(base, reqs, greedy=greedy, seed=7)
+    off_tokens = base.stats()["prefill_tokens"]
+    assert off_tokens == sum(p.shape[0] for p, _ in reqs)
+
+    eng = Engine(m, params, max_slots=3, page_tokens=16, prefix_cache=True,
+                 **kw)
+    got = _drain_staggered(eng, reqs, greedy=greedy, seed=7)
+    assert got == want, "prefix cache changed tokens"
+    st_ = eng.stats()
+    assert st_["prefill_tokens"] <= 0.5 * off_tokens, \
+        (st_["prefill_tokens"], off_tokens)
+    assert st_["prefix_cache"]["hits"] >= len(reqs) - 1
+    eng.prefix_cache.clear()
+    assert eng.pool.num_used == 0
+    assert eng.pool.total_allocs + eng.pool.total_shares \
+        == eng.pool.total_frees
+
+
+def test_fully_cached_prompt_cow_splits_last_page(smollm):
+    """A page-aligned, fully-cached prompt admits at cursor L-1 (the last
+    position's logits feed the first pick) — the one in-place write into a
+    shared page, so it must CoW-split, and tokens must not change."""
+    cfg, m, params = smollm
+    p32 = _tok(32, seed=5) % cfg.vocab               # 2 exact 16-token pages
+    base = Engine(m, params, max_slots=2, page_tokens=16)
+    base.add_request(p32, 5)
+    base.add_request(p32, 5)
+    want = [r.out_tokens for r in sorted(base.drain(), key=lambda r: r.rid)]
+
+    eng = Engine(m, params, max_slots=2, page_tokens=16, prefix_cache=True)
+    eng.add_request(p32, 5)
+    eng.step()                                       # r0 prefills + inserts
+    eng.add_request(p32, 5)
+    fin = {r.rid: r.out_tokens for r in eng.drain()}
+    assert [fin[0], fin[1]] == want
+    pc = eng.stats()["prefix_cache"]
+    assert pc["cow_copies"] == 1 and pc["hit_tokens"] == 31
+    eng.prefix_cache.clear()
+    assert eng.pool.num_used == 0
+
+
+def test_preempt_resume_recomputes_only_uncached_suffix(smollm):
+    """Preemption releases pages into the cache, so a resume's prefill
+    covers at most the tokens generated since its last admission plus one
+    partial page — not the whole folded prompt (the PR-2 fold path is now
+    a cache hit).  Outputs stay identical to an uninterrupted run."""
+    cfg, m, params = smollm
+    key = jax.random.PRNGKey(11)
+    prompts = [np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                             (l,), 0, cfg.vocab))
+               for i, l in enumerate([6, 5])]
+    ample = Engine(m, params, max_slots=2, page_tokens=8)
+    rids = [ample.add_request(p, 12) for p in prompts]
+    want = {r.rid: r.out_tokens for r in ample.drain()}
+
+    tight = Engine(m, params, max_slots=2, page_tokens=8, num_pages=1 + 4,
+                   prefix_cache=True)
+    rids2 = [tight.add_request(p, 12) for p in prompts]
+    fin = {r.rid: r for r in tight.drain()}
+    assert tight.num_preemptions >= 1
+    for rid, rid2 in zip(rids, rids2):
+        assert fin[rid2].out_tokens == want[rid]
+    events = tight.scheduler.resume_events
+    assert events, "preemption under a prefix cache must record resumes"
+    for e in events:
+        # a reclaim or a pool-pressure eviction legitimately loses the
+        # cached prefix (identity still holds); otherwise the bound applies
+        assert e["reclaimed"] or e["evicted"] or \
+            e["recompute"] <= e["generated_since"] + tight.pool.page_tokens, e
+    assert any(not e["reclaimed"] and not e["evicted"] for e in events), \
+        "at least one resume should have found its pages cached"
+    tight.prefix_cache.clear()
+    assert tight.pool.num_used == 0
+    assert tight.pool.total_allocs + tight.pool.total_shares \
+        == tight.pool.total_frees
+
+
+@pytest.mark.parametrize("kw", [dict(), dict(chunk_tokens=16)],
+                         ids=["monolithic", "chunked"])
+def test_zero_recompile_after_warmup_with_cache(smollm, kw):
+    """The no-recompile contract survives the cache: hits, CoW splits and
+    evictions introduce no new step shapes (the CoW copy program is primed
+    by warmup)."""
+    cfg, m, params = smollm
+    reqs = _shared_prefix_trace(cfg, n=4)
+    eng = Engine(m, params, max_slots=3, page_tokens=16, prefix_cache=True,
+                 **kw)
+    eng.warmup()
+    compiles = dict(m.trace_counts)
+    _drain_staggered(eng, reqs)
+    assert dict(m.trace_counts) == compiles, \
+        "prefix-cache serving compiled a new XLA program after warmup()"
+
+
+def test_prefix_cache_rejected_configs(smollm):
+    cfg, m, params = smollm
+    with pytest.raises(AssertionError):
+        Engine(m, params, eager=True, prefix_cache=True)
