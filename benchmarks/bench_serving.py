@@ -146,9 +146,11 @@ def make_longtail_workload(cfg, n, max_prompt, max_new, max_len, seed=0):
 
 def run_longtail(model, params, reqs, slots, *, eager, num_pages,
                  page_tokens=16, chunk_tokens=None):
+    # flat=False: this section compares allocation policies over the dense
+    # chunked step; the flat layout gets its own A/B in bench_flat
     eng = Engine(model, params, max_slots=slots, eager=eager,
                  num_pages=num_pages, page_tokens=page_tokens,
-                 chunk_tokens=chunk_tokens)
+                 chunk_tokens=chunk_tokens, flat=False)
     eng.warmup()       # compile decode + every prefill bucket before timing
     rids = [eng.add_request(p, n) for p, n in reqs]
     t0 = time.perf_counter()
@@ -253,14 +255,17 @@ def make_mixed_trace(cfg, n, max_len, seed=0):
 
 
 def run_traced(model, params, reqs, slots, *, chunk_tokens, num_pages=None,
-               page_tokens=16, arrivals=None):
+               page_tokens=16, arrivals=None, flat=False):
     """Serve ``reqs`` recording a wall-clock stamp per generated token.
     ``arrivals`` (seconds, per request) replays an online offered load —
     ``Engine.step(now=...)`` gates admission by wall time; ``None`` drains
     offline.  Returns (outputs, per-request token-time lists, wall seconds,
-    engine)."""
+    engine).  ``flat`` is passed explicitly (default dense): the engine's
+    own default turns the flat step on with chunking, and the A/B sections
+    here need the dense [slots, chunk] grid as a named baseline."""
     eng = Engine(model, params, max_slots=slots, num_pages=num_pages,
-                 page_tokens=page_tokens, chunk_tokens=chunk_tokens)
+                 page_tokens=page_tokens, chunk_tokens=chunk_tokens,
+                 flat=flat)
     eng.warmup()
     compiles = dict(model.trace_counts)
     arr = arrivals or [0.0] * len(reqs)
@@ -389,6 +394,60 @@ def bench_chunked(model, params, reqs, slots, chunk_tokens, load=0.95,
     return record
 
 
+def bench_flat(model, params, reqs, slots, chunk_tokens, smoke, repeats=3):
+    """Flat [1, budget] token-level step vs the dense [slots, chunk] grid
+    and the monolithic baseline, offline drains.  The contract half (what
+    ``tier1.sh --bench-smoke`` buys): all three drains must produce
+    token-identical outputs — a flat-vs-chunked mismatch fails the run.
+    The perf half: the flat step computes only its real tokens plus
+    m_r-ladder padding where the dense grid always pays slots x chunk
+    positions, so its offline throughput should sit at or above the dense
+    step's (target >= 0.99x monolithic); ``fill`` reports real tokens per
+    compiled position (the padding tax)."""
+    total_new = sum(n for _, n in reqs)
+    print(f"[bench_serving] flat step: {len(reqs)} requests, "
+          f"{total_new} tokens, {slots} slots, chunk={chunk_tokens}")
+    # one warm pass per policy (compiles), then timed offline drains
+    run_traced(model, params, reqs, slots, chunk_tokens=None)
+    run_traced(model, params, reqs, slots, chunk_tokens=chunk_tokens,
+               flat=False)
+    run_traced(model, params, reqs, slots, chunk_tokens=chunk_tokens,
+               flat=True)
+    ratios_m, ratios_c, st = [], [], None
+    for _ in range(1 if smoke else repeats):
+        base_out, _, dt_m, _ = run_traced(model, params, reqs, slots,
+                                          chunk_tokens=None)
+        dense_out, _, dt_c, _ = run_traced(model, params, reqs, slots,
+                                           chunk_tokens=chunk_tokens,
+                                           flat=False)
+        flat_out, _, dt_f, eng = run_traced(model, params, reqs, slots,
+                                            chunk_tokens=chunk_tokens,
+                                            flat=True)
+        assert flat_out == dense_out, \
+            "flat step outputs diverged from the dense chunked step"
+        assert flat_out == base_out, \
+            "flat step outputs diverged from monolithic prefill"
+        ratios_m.append(dt_m / dt_f)
+        ratios_c.append(dt_c / dt_f)
+        st = eng.stats()["flat"]
+    record = {
+        "chunk_tokens": chunk_tokens,
+        "token_budget": st["token_budget"],
+        "offline_throughput_ratio": float(np.median(ratios_m)),
+        "flat_vs_chunked_ratio": float(np.median(ratios_c)),
+        "fill": st["fill"],
+        "mean_tokens_per_step": st["mean_tokens"],
+        "mean_width": st["mean_width"],
+    }
+    tag = ("OK (>= 0.99x)" if record["offline_throughput_ratio"] >= 0.99
+           else "BELOW 0.99x TARGET")
+    print(f"  flat drain {record['offline_throughput_ratio']:.3f}x "
+          f"monolithic ({record['flat_vs_chunked_ratio']:.2f}x the dense "
+          f"chunked step), fill={record['fill']:.2f}  [{tag}]; outputs "
+          f"token-identical across flat/chunked/monolithic")
+    return record
+
+
 # ---------------------------------------------------------------------------
 # prefix cache: shared-system-prompt trace, cache-on vs cache-off
 # ---------------------------------------------------------------------------
@@ -419,9 +478,11 @@ def run_prefix(model, params, reqs, slots, *, prefix_cache, chunk_tokens=None,
     """Warmed, staggered drain with the zero-recompile assert and (cache
     on) the end-of-drain balance check: clearing the cache must return the
     pool to zero used pages with allocs+shares == frees."""
+    # flat=False keeps the "chunked/..." rows on the dense grid they name
     eng = Engine(model, params, max_slots=slots, page_tokens=page_tokens,
                  num_pages=num_pages, chunk_tokens=chunk_tokens,
-                 spec_tokens=spec_tokens, prefix_cache=prefix_cache)
+                 spec_tokens=spec_tokens, prefix_cache=prefix_cache,
+                 flat=False)
     eng.warmup()
     compiles = dict(model.trace_counts)
     rids = [eng.add_request(p, n, arrival=float(2 * i))
@@ -785,6 +846,10 @@ def main(argv=None):
         if "itl_p95_improvement" in report["chunked"]:
             results["itl_p95_improvement"] = \
                 report["chunked"]["itl_p95_improvement"]
+        report["flat"] = bench_flat(model, params, mixed, args.slots,
+                                    args.chunk_tokens, args.smoke)
+        results["flat_offline_throughput_ratio"] = \
+            report["flat"]["offline_throughput_ratio"]
 
     if not args.skip_spec and all(t == "attn" for t in cfg.layer_types):
         model, params = models[policies[0]]

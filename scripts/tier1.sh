@@ -5,7 +5,9 @@
 # With the serving-allocator smoke:  ./scripts/tier1.sh --bench-smoke
 #   (runs bench_serving.py at toy sizes — 2 slots, tiny pool, long-tail
 #   trace at 50% of the eager reservation, the chunked-vs-monolithic
-#   prefill A/B, the speculative-decoding section, and the prefix-cache
+#   prefill A/B, the flat-step section (flat/chunked/monolithic outputs
+#   must be token-identical — a flat-vs-chunked mismatch fails the run),
+#   the speculative-decoding section, and the prefix-cache
 #   section (shared-system-prompt trace: cache-on must be token-identical
 #   to cache-off at <= 0.5x the prefill tokens, and a tight-pool
 #   preempt-resume must recompute only the uncached suffix) —
@@ -22,7 +24,7 @@ for a in "$@"; do
 done
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-  python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
+  python -m pytest -x -q --durations=15 ${ARGS[@]+"${ARGS[@]}"}
 
 if [[ "$BENCH_SMOKE" == 1 ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

@@ -1,0 +1,1 @@
+from repro.kernels.ragged_attn.ops import *  # noqa: F401,F403

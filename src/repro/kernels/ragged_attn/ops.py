@@ -1,0 +1,46 @@
+"""Dispatch wrapper for segment-masked ragged paged attention.
+
+On TPU the Pallas kernel runs; everywhere else the jnp oracle does.  The
+oracle is not a fallback of convenience: off-TPU the serving engine's
+bitwise flat-vs-dense identity contract is verified against it, so the
+dispatch must happen at trace time (``jax.default_backend()``) — the
+caller (models/attention.py) is already inside the engine's jit.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ragged_attn.ref import ragged_attention_ref
+
+__all__ = ["ragged_attention", "ragged_attention_reference"]
+
+
+def ragged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                     v_pages: jnp.ndarray, *, block_tables: jnp.ndarray,
+                     row_ids: jnp.ndarray, q_pos: jnp.ndarray,
+                     use_kernel: Optional[bool] = None,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q: [W, Hq, dh] flat queries; k_pages/v_pages: [P, T, Hkv, dh] pool;
+    block_tables: [B, MP]; row_ids: [W] (-1 = pad); q_pos: [W].
+    Returns [W, Hq, dh]."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels.ragged_attn.kernel import ragged_attention_kernel_call
+        return ragged_attention_kernel_call(
+            q, k_pages, v_pages, block_tables=block_tables,
+            row_ids=row_ids, q_pos=q_pos, interpret=interpret)
+    return ragged_attention_ref(q, k_pages, v_pages,
+                                block_tables=block_tables,
+                                row_ids=row_ids, q_pos=q_pos)
+
+
+def ragged_attention_reference(q, k_pages, v_pages, *, block_tables,
+                               row_ids, q_pos):
+    return ragged_attention_ref(q, k_pages, v_pages,
+                                block_tables=block_tables,
+                                row_ids=row_ids, q_pos=q_pos)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the segment-masked ragged paged-attention kernel.
+
+Flat token-level batching (vLLM/Sarathi-style): queries arrive as one
+``[W, Hq, dh]`` stream where position ``i`` belongs to engine row
+``row_ids[i]`` and sits at absolute sequence position ``q_pos[i]`` of that
+row.  Each query gathers its own row's page stream from the pool and
+attends causally within its segment (``kv_pos <= q_pos[i]``) — the
+segment-aware causal mask that makes one fixed ``[1, W]`` shape serve any
+mix of decode / chunked-prefill / speculative-verify rows.
+
+Numerics mirror :func:`repro.models.attention.core_attention` exactly
+(fp32 scores and softmax, same contraction order, same ``-1e30`` masking)
+so the flat step stays bitwise identical to the dense ``[slots, chunk]``
+step on the same tokens.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ragged_attention_ref"]
+
+
+def ragged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                         v_pages: jnp.ndarray, *, block_tables: jnp.ndarray,
+                         row_ids: jnp.ndarray,
+                         q_pos: jnp.ndarray) -> jnp.ndarray:
+    """q: [W, Hq, dh]; k_pages/v_pages: [P, T, Hkv, dh] pool (page 0 = trash);
+    block_tables: [B, MP]; row_ids: [W] int32 (-1 = padding — clamped to row
+    0, output garbage, caller discards); q_pos: [W] absolute positions.
+    Returns [W, Hq, dh] in q.dtype."""
+    w, hq, dh = q.shape
+    hkv = k_pages.shape[2]
+    g = hq // hkv
+    bt = block_tables[jnp.maximum(row_ids, 0)]                 # [W, MP]
+    k_all = k_pages[bt].reshape(w, -1, hkv, dh)                # [W, MP*T, ...]
+    v_all = v_pages[bt].reshape(w, -1, hkv, dh)
+    qg = q.reshape(w, hkv, g, dh)
+    scale = dh ** -0.5
+    scores = jnp.einsum("qhgd,qkhd->qhgk", qg.astype(jnp.float32),
+                        k_all.astype(jnp.float32)) * scale
+    kv_pos = jnp.arange(k_all.shape[1])
+    neg = jnp.float32(-1e30)
+    m = kv_pos[None, :] <= q_pos[:, None]                      # [W, MP*T]
+    scores = jnp.where(m[:, None, None, :], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("qhgk,qkhd->qhgd", probs, v_all.astype(jnp.float32))
+    return out.reshape(w, hq, dh).astype(q.dtype)

@@ -24,7 +24,7 @@ from repro.models.common import Stream, apply_rope, maybe_unpack, norm_apply, no
 Array = jnp.ndarray
 
 __all__ = ["attn_init", "attn_apply", "init_kv_cache", "init_paged_kv_cache",
-           "core_attention", "paged_kv_update"]
+           "core_attention", "paged_kv_update", "flat_paged_kv_update"]
 
 
 def attn_init(key, cfg: ModelConfig, dtype=jnp.float32, *, cross: bool = False) -> dict:
@@ -102,6 +102,35 @@ def paged_kv_update(cache: dict, k: Array, v: Array, *, block_tables: Array,
     return {"k_pages": kp, "v_pages": vp}, k_all, v_all, mask
 
 
+def flat_paged_kv_update(cache: dict, k: Array, v: Array, *,
+                         block_tables: Array, row_ids: Array, q_pos: Array):
+    """Scatter one flat ``[1, W]`` token stream's K/V into the page pool.
+
+    Flat-segment layout contract (the token-level analogue of
+    :func:`paged_kv_update`'s row contract): position ``i`` of the stream
+    belongs to engine row ``row_ids[i]`` (``-1`` = padding, routed to the
+    trash page) and sits at absolute position ``q_pos[i]`` of that row, so
+    its page is ``block_tables[row_ids[i], q_pos[i] // T]`` at offset
+    ``q_pos[i] % T``.  Rows are fully ragged: one step may interleave
+    decode segments (1+k positions), chunked-prefill segments, and padding
+    up to the ``m_r``-aligned width W.
+
+    cache: {"k_pages","v_pages"} [P, T, Hkv, dh]; k, v: [1, W, Hkv, dh];
+    block_tables: [B, MP]; row_ids, q_pos: [W].  Returns the new cache —
+    the gather side lives in the ragged-attention op, which reads each
+    query's own page stream (kernels/ragged_attn)."""
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    t = kp.shape[1]
+    valid = row_ids >= 0
+    row = jnp.maximum(row_ids, 0)
+    slot = jnp.minimum(q_pos // t, block_tables.shape[1] - 1)
+    page = jnp.where(valid, block_tables[row, slot], 0)
+    off = jnp.where(valid, q_pos % t, 0)
+    kp = kp.at[page, off].set(k[0].astype(kp.dtype))
+    vp = vp.at[page, off].set(v[0].astype(vp.dtype))
+    return {"k_pages": kp, "v_pages": vp}
+
+
 def core_attention(q: Array, k: Array, v: Array, *, causal: bool,
                    q_pos: Array, kv_len_mask: Optional[Array] = None) -> Array:
     """q: [B,Sq,Hq,dh]; k,v: [B,Skv,Hkv,dh].  fp32 softmax; GQA grouping.
@@ -177,6 +206,11 @@ def attn_apply(params: dict, x: Stream, ctx: MatmulContext, cfg: ModelConfig, *,
         {block_tables [B,MP], lens [B], new_counts [B]}; every row sits at
         its own position (``positions`` is [B,S]), K/V are scattered into
         the row's pages and attention reads the gathered page stream.
+      - flat paged (token-level batching): ``paged`` carries
+        {block_tables [B,MP], row_ids [W], q_pos [W]} and x is one
+        ``[1, W]`` stream — per-position scatter, then the segment-masked
+        ragged-attention op (kernels/ragged_attn) gathers each query's own
+        row.
       - cross-attention: ``kv_source`` [B,S_enc,D] — K/V from the encoder
         output (positions/causality ignored; no cache mutation here, whisper
         cross K/V are precomputed per request by the serving engine).
@@ -210,6 +244,19 @@ def attn_apply(params: dict, x: Stream, ctx: MatmulContext, cfg: ModelConfig, *,
 
     new_cache = kv_cache
     kv_len_mask = None
+    if paged is not None and "row_ids" in paged:
+        from repro.kernels.ragged_attn import ragged_attention
+        new_cache = flat_paged_kv_update(
+            kv_cache, k, v, block_tables=paged["block_tables"],
+            row_ids=paged["row_ids"], q_pos=paged["q_pos"])
+        out = ragged_attention(
+            q[0], new_cache["k_pages"], new_cache["v_pages"],
+            block_tables=paged["block_tables"], row_ids=paged["row_ids"],
+            q_pos=paged["q_pos"])[None]
+        out = ctx.constrain(out, (None, mdl, None)).reshape(b, sq, hq * dh)
+        out = linear_apply(params["wo"], out, ctx, keep_packed=keep_packed,
+                           tp="row")
+        return out, new_cache
     if paged is not None:
         new_cache, k, v, kv_len_mask = paged_kv_update(
             kv_cache, k, v, block_tables=paged["block_tables"],

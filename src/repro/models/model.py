@@ -207,6 +207,31 @@ class ReproModel:
             caches=caches, paged=paged, logits_at=logits_at)
         return logits, new_caches
 
+    def flat_decode_step(self, params: dict, caches: dict, token: Array,
+                         block_tables: Array, row_ids: Array, q_pos: Array,
+                         logits_idx: Array) -> Tuple[Array, dict]:
+        """Flat token-level continuous-batching step (the paper's
+        fixed-shape-grid argument at token granularity): one ``[1, W]``
+        stream where position ``i`` is token ``q_pos[i]`` of engine row
+        ``row_ids[i]`` (``-1`` = padding).  Rows become variable-length
+        *segments* of the stream — a decode row costs exactly its 1+k real
+        positions instead of a padded chunk-width row, so the token budget
+        is token-exact.  Attention is the segment-masked ragged op over the
+        page pool (kernels/ragged_attn).
+
+        ``block_tables``: [B, MP] per-row page ids; ``logits_idx``: [K]
+        flat positions to read logits at (each row's last position per
+        draft slot — fixed K keeps the head projection and the step shape
+        static).  Returns (logits [1, K, V], caches')."""
+        x = embed_apply(params["embed"], token).astype(self.compute_dtype)
+        positions = q_pos[None, :]
+        paged = {"block_tables": block_tables, "row_ids": row_ids,
+                 "q_pos": q_pos}
+        logits, new_caches, _ = tfm.lm_apply(
+            params, x, self.ctx, self.cfg, self.run, positions=positions,
+            caches=caches, paged=paged, logits_at=logits_idx[None, :])
+        return logits, new_caches
+
     def prefill_cache(self, params: dict, batch: dict) -> dict:
         """Serving-side: build a cache for decode (whisper: run the encoder
         and materialize cross K/V)."""
@@ -228,7 +253,7 @@ class ReproModel:
         compile counter — the hook Engine.warmup's no-recompile-after-warmup
         contract is regression-tested against."""
         if not hasattr(self, "_trace_counts"):
-            self._trace_counts = {"decode": 0, "paged": 0}
+            self._trace_counts = {"decode": 0, "paged": 0, "flat": 0}
         return self._trace_counts
 
     def jit_step(self, kind: str = "decode"):
@@ -240,7 +265,8 @@ class ReproModel:
             self._jit_cache = {}
         if kind not in self._jit_cache:
             fn = {"decode": self.decode_step,
-                  "paged": self.paged_decode_step}[kind]
+                  "paged": self.paged_decode_step,
+                  "flat": self.flat_decode_step}[kind]
             counts = self.trace_counts
 
             def counted(*args, _fn=fn, _kind=kind, **kwargs):

@@ -110,7 +110,7 @@ from repro.serving.kv_cache import (PagedKVPool, copy_pages,
                                     fresh_slot_states, merge_slot,
                                     prefill_view)
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import Request, Scheduler, finish_reason_for
 from repro.serving.speculative import Drafter, NgramDrafter, accept_tokens
 
 __all__ = ["Engine"]
@@ -124,6 +124,7 @@ class Engine:
                  page_tokens: int = 16, num_pages: Optional[int] = None,
                  eager: bool = False, watermark_pages: int = 1,
                  chunk_tokens: Optional[int] = None,
+                 flat: Optional[bool] = None,
                  token_budget: Optional[int] = None,
                  spec_tokens: Optional[int] = None,
                  drafter: Optional[Drafter] = None,
@@ -140,6 +141,9 @@ class Engine:
         self.continuous = model.cfg.family not in _STATIC_FAMILIES
         self._next_rid = 0
         if not self.continuous:
+            assert not flat, \
+                f"{model.cfg.family} serves via generate_static; the flat " \
+                f"token-level step needs the continuous paged path"
             assert chunk_tokens is None, \
                 f"{model.cfg.family} serves via generate_static; chunked " \
                 f"prefill needs the continuous paged path"
@@ -172,6 +176,16 @@ class Engine:
                                round_up(max_len, layout.m_r))
         self.chunk_tokens = chunk_tokens
         self.chunked = chunk_tokens is not None
+        # flat token-level batching (the default whenever chunking is on):
+        # the fused step becomes one [1, W] m_r-packed token stream with
+        # per-position row ids — a decode row costs its real 1+k positions
+        # instead of a padded chunk-width row.  flat=False keeps the dense
+        # [slots, chunk] step as the A/B baseline.
+        self.flat = self.chunked if flat is None else bool(flat)
+        if self.flat:
+            assert self.chunked, \
+                "flat=True needs chunk_tokens: the flat token-level step " \
+                "rides the chunked scheduler (segments are its chunks)"
         # the fused step is dense, so its device cost is set by the SHAPE
         # (slots x chunk_tokens), not by how many of those positions carry
         # tokens — the rational default budget is therefore shape-limited
@@ -249,6 +263,10 @@ class Engine:
         self._chunk_steps_total = 0      # prefill calls/chunks over finished
         self._prefill_tokens = 0         # prompt tokens actually computed
                                          # (cache hits skip theirs)
+        # flat-step counters (token-exactness telemetry)
+        self._flat_steps = 0
+        self._flat_tokens = 0            # real tokens fed, summed over steps
+        self._flat_width = 0             # compiled widths W, summed
         # speculative counters
         self._draft_time = 0.0           # host wall time inside the drafter
         self._drafted = 0                # draft tokens actually verified
@@ -265,6 +283,7 @@ class Engine:
             self.caches = jax.device_put(self.caches,
                                          sharding.named(mesh, specs))
         self._paged_step = model.jit_step("paged")
+        self._flat_step = model.jit_step("flat") if self.flat else None
 
     def _copy_page(self, src: int, dst: int) -> None:
         """Device-side copy-on-write: duplicate page ``src`` into ``dst``
@@ -329,6 +348,18 @@ class Engine:
         }
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()
+        if self.flat:
+            fs = max(1, self._flat_steps)
+            out["flat"] = {
+                "token_budget": self.token_budget,
+                "steps": self._flat_steps,
+                "mean_tokens": self._flat_tokens / fs,
+                "mean_width": self._flat_width / fs,
+                # real tokens per compiled position: the padding tax the
+                # flat layout pays (1.0 = none; the dense [slots, chunk]
+                # grid pays slots*chunk/real)
+                "fill": self._flat_tokens / max(1, self._flat_width),
+            }
         if self.spec_tokens is not None:
             out["speculative"] = {
                 "spec_tokens": self.spec_tokens,
@@ -359,7 +390,9 @@ class Engine:
         active row carries 1 (decoding) to ``chunk_tokens`` (prefilling)
         new positions.  Returns requests finished during this step."""
         t0 = time.perf_counter()
-        if self.chunked:
+        if self.flat:
+            finished = self._step_flat(now, greedy, seed)
+        elif self.chunked:
             finished = self._step_chunked(now, greedy, seed)
         else:
             finished = self._step_monolithic(now, greedy, seed)
@@ -512,6 +545,133 @@ class Engine:
                     finished.append(req)
         return finished
 
+    def _step_flat(self, now, greedy: bool, seed: int) -> List[Request]:
+        """The flat token-level step (vLLM/Sarathi-style flat batching; the
+        paper's fixed-shape-grid argument at token granularity).  One
+        ``[1, W]`` stream — ``W`` from a geometric ladder over the token
+        budget, ``m_r``-aligned — carries every scheduled row as a
+        contiguous *segment*: per-position ``row_ids`` (-1 = padding) and
+        absolute ``q_pos`` replace the dense step's per-row
+        ``lens``/``new_counts``, and the segment-aware causal ragged
+        attention (kernels/ragged_attn) reads each position's own row.  A
+        decode row costs exactly its 1 + drafts real positions — no
+        chunk-width padding tax — so the budget is token-exact.  Scheduling
+        (admission, growth, chunk planning, stalls, preemption) is byte-
+        identical to the dense chunked step; only the layout of the fed
+        tokens changes, and outputs stay token-identical to both the dense
+        and monolithic policies (asserted by tests/test_flat_step.py)."""
+        sched = self.scheduler
+        finished: List[Request] = []
+        sched.admit(now)
+        drafts = self._draft_and_grow()
+        running = sched.running
+        if not running:
+            return finished
+        neff = self._grant_drafts(running, drafts)
+        decode_counts = {s: n for s, n in neff.items() if n > 0}
+        segs = sched.plan_segments(decode_counts, self.token_budget)
+        total = sum(n for _, _, n in segs)
+        assert total > 0, "running slots but nothing to advance"
+        ndecode = sum(decode_counts.values())
+        # decodes (and their drafts) are unconditional; only prefill
+        # tokens are budget-capped — token-exact, not shape-limited
+        assert total <= max(self.token_budget, ndecode)
+        w = self._flat_shape(total)
+        spec = any(n > 1 for n in decode_counts.values())
+        k1 = self.spec_tokens + 1 if spec else 1
+        token = np.zeros((1, w), np.int32)
+        row_ids = np.full((w,), -1, np.int32)
+        q_pos = np.zeros((w,), np.int32)
+        bt = np.zeros((self.slots, self.max_pages), np.int32)
+        idx = np.zeros((self.slots * k1,), np.int32)
+        pos = 0
+        segrefs = []
+        for slot, kind, n in segs:
+            req = running[slot]
+            if kind == "decode":
+                token[0, pos] = req.out_tokens[-1]
+                if n > 1:
+                    token[0, pos + 1:pos + n] = drafts[slot]
+                q_pos[pos:pos + n] = req.len + np.arange(n)
+            else:
+                cur = req.prefill_cursor
+                token[0, pos:pos + n] = req.prompt[cur:cur + n]
+                q_pos[pos:pos + n] = cur + np.arange(n)
+            row_ids[pos:pos + n] = slot
+            bt[slot] = req.pages.block_row(self.max_pages)
+            # decode rows read logits after every fed position (clamped to
+            # their own width); prefill rows read their last chunk token
+            if kind == "decode":
+                idx[slot * k1:(slot + 1) * k1] = \
+                    pos + np.minimum(np.arange(k1), n - 1)
+            else:
+                idx[slot * k1:(slot + 1) * k1] = pos + n - 1
+            segrefs.append((slot, kind, n, req))
+            pos += n
+        self._active_rows += len(segrefs)
+        self._mixed_steps += int(any(kind == "prefill"
+                                     for _, kind, _ in segs))
+        self._flat_steps += 1
+        self._flat_tokens += total
+        self._flat_width += w
+        rows = self._run_flat(token, bt, row_ids, q_pos, idx)
+        rows = rows.reshape(self.slots, k1, -1)
+        for slot, kind, n, req in segrefs:
+            if kind == "decode":
+                self._verify_decode_row(req, drafts.get(slot, []),
+                                        rows[slot], n, greedy, seed, finished)
+                continue
+            req.prefill_cursor += n
+            req.len = req.prefill_cursor
+            req.chunk_steps += 1
+            self._prefill_tokens += n
+            if self.prefix_cache is not None:
+                self.prefix_cache.insert(req.prompt, req.pages.pages,
+                                         req.prefill_cursor)
+            if req.prefill_cursor < req.prompt_len:
+                continue                  # more chunks to come
+            req.status = "running"
+            req.out_tokens.append(
+                self._pick(rows[slot, 0], req, greedy, seed))
+            if req.done():
+                sched.finish(req)
+                finished.append(req)
+        return finished
+
+    def _run_flat(self, token, bt, row_ids, q_pos, idx) -> np.ndarray:
+        """One flat step; returns logits [K_out, V] at the flat ``idx``
+        positions (K_out = slots * (spec_tokens+1 or 1))."""
+        logits, self.caches = self._flat_step(
+            self.params, self.caches, jnp.asarray(token), jnp.asarray(bt),
+            jnp.asarray(row_ids), jnp.asarray(q_pos), jnp.asarray(idx))
+        return np.asarray(logits)[0]
+
+    def _flat_shapes(self) -> List[int]:
+        """The flat step's geometric width ladder, descending: the token
+        budget's ``m_r``-aligned cap (raised to ``slots * (spec_tokens+1)``
+        when speculation can outgrow the budget — decode tokens are
+        unconditional) plus every power-of-two multiple of ``m_r`` below
+        it.  A decode-only step rides a width near its real token count
+        instead of the full budget; compile count stays logarithmic."""
+        cap = round_up(max(self.token_budget,
+                           self.slots * ((self.spec_tokens or 0) + 1)),
+                       self._bucket)
+        shapes = {cap}
+        v = self._bucket
+        while v < cap:
+            shapes.add(v)
+            v *= 2
+        return sorted(shapes, reverse=True)
+
+    def _flat_shape(self, n: int) -> int:
+        """Smallest ladder width holding ``n`` flat tokens."""
+        shapes = self._flat_shapes()
+        s = shapes[0]
+        for cand in shapes:
+            if cand >= n:
+                s = cand
+        return s
+
     # ------------------------------------------------------------------
     # speculative decode plumbing (no-ops when spec_tokens is None: every
     # row proposes nothing, carries n_eff == 1, and the verify loop
@@ -525,16 +685,26 @@ class Engine:
         if self.drafter is None:
             return {}
         t0 = time.perf_counter()
-        drafts = {}
+        jobs, slot_of = [], {}
         for slot, req in self.scheduler.running.items():
             if req.status != "running":
                 continue
             k = min(self.spec_tokens, req.max_new - len(req.out_tokens) - 1)
             if k <= 0:
                 continue
-            d = [int(t) for t in self.drafter.propose(req, k)][:k]
-            if d:
-                drafts[slot] = d
+            jobs.append((req, k))
+            slot_of[req.rid] = slot
+        drafts = {}
+        if jobs:
+            # one batched call for the whole step's rows — a model-backed
+            # drafter runs one [slots, 1] step per draft position instead
+            # of k sequential [1, 1] steps per row (Drafter.propose_all;
+            # the base class degenerates to the per-row loop)
+            proposals = self.drafter.propose_all(jobs)
+            for req, k in jobs:
+                d = [int(t) for t in proposals.get(req.rid, [])][:k]
+                if d:
+                    drafts[slot_of[req.rid]] = d
         self._draft_time += time.perf_counter() - t0
         return drafts
 
@@ -614,6 +784,14 @@ class Engine:
             self._drafted += n - 1
             self._accepted += accepted
             self._rollback_pages += req.pages.truncate(req.len)
+            # mid-draft eos (or any early stop): the block table must end
+            # exactly at the last committed token — a page past it could
+            # carry rejected/post-eos draft KV into a later prefix-cache
+            # insert (preemption inserts up to req.len, but only pages
+            # that exist can ever be shared)
+            assert len(req.pages.pages) == self.pool.pages_for(req.len), \
+                f"rollback left {len(req.pages.pages)} pages for " \
+                f"len={req.len} (expected {self.pool.pages_for(req.len)})"
         if req.done():
             self.scheduler.finish(req)
             finished.append(req)
@@ -688,6 +866,24 @@ class Engine:
             self._copy_page(0, 0)
         zb = jnp.zeros((self.slots,), jnp.int32)
         btb = jnp.zeros((self.slots, self.max_pages), jnp.int32)
+        if self.flat:
+            # every ladder width × every logits-gather width (spec steps
+            # read slots*(k+1) flat positions, draft-free steps slots*1);
+            # all-padding streams (row_ids == -1) route writes to the trash
+            # page, so live state is untouched
+            k1s = [1] + ([self.spec_tokens + 1]
+                         if self.spec_tokens is not None else [])
+            for w in self._flat_shapes():
+                pad = jnp.full((w,), -1, jnp.int32)
+                qz = jnp.zeros((w,), jnp.int32)
+                for k1 in k1s:
+                    _, self.caches = self._flat_step(
+                        self.params, self.caches,
+                        jnp.zeros((1, w), jnp.int32), btb, pad, qz,
+                        jnp.zeros((self.slots * k1,), jnp.int32))
+            if self.spec_tokens is not None:
+                self.drafter.warmup()
+            return
         idxz = (None if self.spec_tokens is None else
                 jnp.zeros((self.slots, self.spec_tokens + 1), jnp.int32))
         if self.chunked:
@@ -802,12 +998,13 @@ class Engine:
             reasons = ["length"] * out.shape[0]
             if eos_id is not None:
                 for i in range(out.shape[0]):
-                    hits = np.flatnonzero(out[i] == eos_id)
-                    # eos on the final token is "length", matching the
-                    # continuous path (Request.done checks length first)
-                    if hits.size and hits[0] < max_new - 1:
-                        out[i, hits[0]:] = eos_id
-                        reasons[i] = "eos"
+                    # one shared classification rule with the continuous
+                    # path (scheduler.finish_reason_for) — the two can
+                    # never drift: eos on the final token is "length"
+                    kept, reasons[i] = finish_reason_for(out[i], max_new,
+                                                         eos_id)
+                    if reasons[i] == "eos":
+                        out[i, kept - 1:] = eos_id
             return (out, reasons) if return_reasons else out
         assert not self.scheduler.has_work, \
             "generate() needs an idle engine; use add_request/step instead"

@@ -87,14 +87,30 @@ list runs dry, and availability checks count ``pool.num_available``), so
 every preemption/termination argument above survives the cache holding
 pages.
 
-A note on the token budget: the engine's step *shape* is fixed at
-``(slots, chunk_tokens)`` whenever any slot prefills (the paper's
-fixed-shape-grid philosophy: one compiled shape, occupancy varies via
-``new_counts``), so per-step device compute is bounded by the shape, not
-the budget.  ``chunk_tokens`` is therefore the latency knob; the
-``token_budget`` cap on total assigned new tokens additionally bounds how
-many slots prefill concurrently (page-allocation raggedness), and decoding
-slots are never budget-stalled — decode progress is unconditional.
+A note on the token budget: under the dense chunked policy the engine's
+step *shape* is fixed at ``(slots, chunk_tokens)`` whenever any slot
+prefills (the paper's fixed-shape-grid philosophy: one compiled shape,
+occupancy varies via ``new_counts``), so per-step device compute is
+bounded by the shape, not the budget.  ``chunk_tokens`` is therefore the
+latency knob; the ``token_budget`` cap on total assigned new tokens
+additionally bounds how many slots prefill concurrently (page-allocation
+raggedness), and decoding slots are never budget-stalled — decode
+progress is unconditional.
+
+**Flat-segment layout contract** (the default engine step since the flat
+refactor; :meth:`Scheduler.plan_segments`): the step is one ``[1, W]``
+token stream, ``W`` the token budget rounded up to the layout's ``m_r``
+(tile writes stay whole).  Each scheduled row occupies a contiguous
+*segment* of the stream: position ``i`` carries ``row_ids[i]`` (the
+slot; ``-1`` = padding) and ``q_pos[i]`` (the token's absolute position
+in that row — its segment offset plus the row's cursor/len), and the
+attention mask is segment-aware causal (``kv_pos <= q_pos[i]`` within
+the row's own page stream, see kernels/ragged_attn).  A decode row costs
+exactly its ``1 + granted_drafts`` real positions — not a padded
+chunk-width row — so the budget is token-exact: ``sum(segment lengths)
+<= token_budget`` counts only real tokens, the per-token padding tax of
+the dense ``[slots, chunk]`` grid is gone, and decode segments are still
+never budget-stalled (they are planned before prefill chunks).
 
 ``eager=True`` restores the PR-1 policy (reserve the full lifetime at
 admission; growth never fails) — kept as the benchmark baseline.
@@ -110,7 +126,23 @@ import numpy as np
 
 from repro.serving.kv_cache import OutOfPages, PagedKVPool, SequencePages
 
-__all__ = ["Request", "Scheduler"]
+__all__ = ["Request", "Scheduler", "finish_reason_for"]
+
+
+def finish_reason_for(tokens, max_new: int, eos_id: Optional[int]):
+    """The single finish-reason rule, shared by the continuous path
+    (:meth:`Request.done`) and ``Engine.generate``'s static post-hoc
+    classification so the two can never drift: the first eos strictly
+    before the final permitted position finishes the stream as ``"eos"``
+    (keeping ``i + 1`` tokens, eos included); otherwise the stream runs to
+    ``max_new`` and finishes as ``"length"`` — an eos that lands *on* the
+    final token is a length finish, since the budget, not the eos, is what
+    stopped generation.  Returns ``(n_kept, reason)``."""
+    if eos_id is not None:
+        for i, t in enumerate(tokens[:max_new]):
+            if t == eos_id and i < max_new - 1:
+                return i + 1, "eos"
+    return min(len(tokens), max_new), "length"
 
 
 @dataclasses.dataclass
@@ -170,12 +202,11 @@ class Request:
         return self.prompt_len + (self.max_new - len(self.out_tokens)) - 1
 
     def done(self) -> bool:
-        if len(self.out_tokens) >= self.max_new:
-            self.finish_reason = self.finish_reason or "length"
-            return True
-        if self.eos_id is not None and self.out_tokens \
-                and self.out_tokens[-1] == self.eos_id:
-            self.finish_reason = "eos"
+        if len(self.out_tokens) >= self.max_new or (
+                self.eos_id is not None and self.out_tokens
+                and self.out_tokens[-1] == self.eos_id):
+            self.finish_reason = self.finish_reason or finish_reason_for(
+                self.out_tokens, self.max_new, self.eos_id)[1]
             return True
         return False
 
@@ -413,6 +444,29 @@ class Scheduler:
         if stalled:
             self.prefill_stall_steps += 1
         return plan
+
+    def plan_segments(self, decode_counts: Dict[int, int],
+                      budget: int) -> List[tuple]:
+        """Flat-segment plan for one ``[1, W]`` step: decode rows first
+        (each costs exactly its ``1 + granted_drafts`` real positions —
+        token-exact, never budget-stalled), then prefill chunks from
+        :meth:`plan_chunks` under the remaining budget (same page
+        bookkeeping, stalls, and reclaim fallbacks as the dense path — the
+        flat layout changes how tokens are *shaped*, not how they are
+        scheduled).  ``decode_counts``: ``{slot: 1 + k}`` for every
+        decoding row.  Returns an ordered ``[(slot, kind, n)]`` list,
+        ``kind in {"decode", "prefill"}``; the engine lays the segments
+        out back-to-back in the flat stream."""
+        ndecode = sum(decode_counts.values())
+        plan = self.plan_chunks(budget - ndecode)
+        segs: List[tuple] = []
+        for slot in sorted(self.running):
+            req = self.running[slot]
+            if req.status == "running" and slot in decode_counts:
+                segs.append((slot, "decode", decode_counts[slot]))
+            elif req.status == "prefilling" and plan.get(slot, 0) > 0:
+                segs.append((slot, "prefill", plan[slot]))
+        return segs
 
     def _reclaim_for(self, req: Request, n: int) -> None:
         """Last-resort page recovery for the oldest prefill when nothing

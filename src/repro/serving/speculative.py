@@ -79,6 +79,7 @@ from typing import List, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.layout import round_up
 from repro.core.linear import prepack_params
 from repro.serving.scheduler import Request
 
@@ -157,6 +158,14 @@ class Drafter:
 
     def propose(self, req: Request, k: int) -> List[int]:
         raise NotImplementedError
+
+    def propose_all(self, jobs: List[Tuple[Request, int]]) -> dict:
+        """``{rid: drafts}`` for one engine step's decoding rows at once.
+        The base implementation loops :meth:`propose`; a model-backed
+        drafter overrides it to batch rows through its own step (one
+        ``[slots, 1]`` call per draft position instead of ``k`` sequential
+        ``[1, 1]`` calls per row)."""
+        return {req.rid: self.propose(req, k) for req, k in jobs}
 
     def forget(self, rid: int) -> None:
         """Drop per-request state (the request finished)."""
@@ -244,6 +253,13 @@ class DraftModelDrafter(Drafter):
         self.max_len = model.shape.seq_len
         self._state: dict = {}       # rid -> {caches, ctx_len, spec}
         self.draft_steps = 0         # draft-model step launches
+        # batched (attached) mode: one paged draft cache shared by every
+        # live request — one page per draft row, rid -> row map below
+        self._paged = None
+        self._caches = None
+        self._rows: dict = {}        # rid -> draft row
+        self._lru: dict = {}         # rid -> last propose tick
+        self._tick = 0
 
     def attach(self, engine) -> None:
         assert self.model.cfg.vocab == engine.model.cfg.vocab, \
@@ -253,6 +269,16 @@ class DraftModelDrafter(Drafter):
         # widest context the draft cache must hold: the target's context
         # limit plus the final pick plus k-1 speculative writes
         self.max_len = engine.scheduler.max_len + engine.spec_tokens + 1
+        # batched drafting state: the draft model's own *paged* step (its
+        # per-row lens are what let rows at different positions share one
+        # call), one page per draft row sized to hold a whole stream, and
+        # a [rows, 1] static block table (row r -> page 1 + r; page 0
+        # stays the trash page for inert rows)
+        self._slots = engine.slots
+        layout = self.model.ctx.layout(self.model.compute_dtype)
+        self._page_tokens = round_up(self.max_len, layout.m_r)
+        self._paged = self.model.jit_step("paged")
+        self._caches = None          # device alloc deferred to first use
 
     def _widths(self) -> List[int]:
         w, out = 1, []
@@ -262,11 +288,151 @@ class DraftModelDrafter(Drafter):
         return out
 
     def warmup(self) -> None:
-        """Compile every catch-up width against a scratch cache."""
+        """Compile every catch-up width — batched (attached): the
+        ``[rows, w]`` ragged paged shapes, ``[rows, 1]`` included (w=1);
+        standalone: the dense ``[1, w]`` shapes against a scratch cache."""
+        if self._paged is not None:
+            self._ensure_caches()
+            zb = jnp.zeros((self._slots,), jnp.int32)
+            btz = jnp.zeros((self._slots, 1), jnp.int32)
+            for w in self._batch_widths():
+                _, self._caches = self._paged(
+                    self.params, self._caches,
+                    jnp.zeros((self._slots, w), jnp.int32), btz, zb, zb,
+                    None)
+            return
         for w in self._widths():
             caches = self.model.init_cache(1, self.max_len)
             self._step(self.params, caches,
                        jnp.zeros((1, w), jnp.int32), jnp.int32(0))
+
+    def _batch_widths(self) -> List[int]:
+        """Batched catch-up widths: powers of two up to the pow2 *ceiling*
+        of ``max_len`` — the batched path feeds the whole widest catch-up
+        in one ragged call (per-row padding goes to the trash page), so
+        the top width can exceed ``max_len``, unlike the per-row binary
+        decomposition whose widths never do."""
+        w, out = 1, []
+        while True:
+            out.append(w)
+            if w >= self.max_len:
+                return out
+            w *= 2
+
+    def _ensure_caches(self) -> None:
+        if self._caches is None:
+            self._caches = self.model.init_paged_cache(
+                1 + self._slots, self._page_tokens, self._slots)
+
+    def _row_for(self, rid: int, job_rids: set) -> int:
+        """The draft row (page) backing ``rid``, allocating on first sight.
+        When every row is taken, evict the least-recently-proposing state
+        that is *not* in this step's jobs (it re-feeds its context on next
+        sight — stale page KV is invisible behind its fresh lens).  A
+        victim always exists: live jobs never exceed the engine's slots."""
+        if rid in self._rows:
+            return self._rows[rid]
+        taken = set(self._rows.values())
+        free = [r for r in range(self._slots) if r not in taken]
+        if free:
+            row = free[0]
+        else:
+            victim = min((r for r in self._rows if r not in job_rids),
+                         key=lambda r: self._lru.get(r, -1))
+            row = self._rows.pop(victim)
+            self._state.pop(victim, None)
+            self._lru.pop(victim, None)
+        self._rows[rid] = row
+        return row
+
+    def propose_all(self, jobs: List[Tuple[Request, int]]) -> dict:
+        """Batched drafting (attached engines): every decoding row's
+        catch-up rides ONE ragged ``[rows, w]`` paged call (per-row lens;
+        padding routed to the trash page), then each draft position is ONE
+        batched ``[rows, 1]`` greedy step — ``1 + (k-1)`` device launches
+        per engine step instead of the per-row loop's
+        ``rows * (catchup + k - 1)``.  Tokens are identical to the per-row
+        path: same reconcile, same greedy argmax chain, row-independent
+        attention."""
+        if self._paged is None or not jobs:
+            return super().propose_all(jobs)
+        self._ensure_caches()
+        self._tick += 1
+        job_rids = {req.rid for req, _ in jobs}
+        plans = []
+        for req, k in jobs:
+            row = self._row_for(req.rid, job_rids)
+            self._lru[req.rid] = self._tick
+            st = self._state.get(req.rid)
+            if st is None:
+                st = {"ctx_len": 0, "spec": np.zeros((0,), np.int32)}
+                self._state[req.rid] = st
+            ctx = request_context(req)
+            size = int(ctx.shape[0])
+            # reconcile + the start-one-token-early trick, exactly as in
+            # the per-row path (see propose)
+            base, spec = st["ctx_len"], st["spec"]
+            m = 0
+            while (m < spec.shape[0] and base + m < size
+                   and spec[m] == ctx[base + m]):
+                m += 1
+            start = min(base + m, size - 1)
+            plans.append({"row": row, "req": req, "k": k, "ctx": ctx,
+                          "size": size, "start": start, "st": st})
+        # one ragged catch-up call at the pow2 width of the widest row
+        maxn = max(p["size"] - p["start"] for p in plans)
+        w = 1
+        while w < maxn:
+            w *= 2
+        rows_n = self._slots
+        token = np.zeros((rows_n, w), np.int32)
+        lens = np.zeros((rows_n,), np.int32)
+        counts = np.zeros((rows_n,), np.int32)
+        bt = np.zeros((rows_n, 1), np.int32)
+        for p in plans:
+            r, n = p["row"], p["size"] - p["start"]
+            token[r, :n] = p["ctx"][p["start"]:p["size"]]
+            lens[r] = p["start"]
+            counts[r] = n
+            bt[r, 0] = 1 + r
+        logits = self._run_batch(token, bt, lens, counts)
+        drafted = {p["row"]: [] for p in plans}
+        kmax = max(p["k"] for p in plans)
+        for j in range(kmax):
+            for p in plans:
+                if j < p["k"]:
+                    drafted[p["row"]].append(
+                        int(np.argmax(logits[p["row"], 0])))
+            if j == kmax - 1:
+                break                # the last draft's KV is never needed
+            token = np.zeros((rows_n, 1), np.int32)
+            lens = np.zeros((rows_n,), np.int32)
+            counts = np.zeros((rows_n,), np.int32)
+            for p in plans:
+                r = p["row"]
+                if j + 1 >= p["k"]:
+                    continue         # this row is done: inert this call
+                token[r, 0] = drafted[r][-1]
+                lens[r] = p["size"] + j
+                counts[r] = 1
+            logits = self._run_batch(token, bt, lens, counts)
+        out = {}
+        for p in plans:
+            d = drafted[p["row"]]
+            st = p["st"]
+            st["ctx_len"] = p["size"]
+            # positions written beyond the committed context: all but the
+            # last proposed token
+            st["spec"] = np.asarray(d[:-1], np.int32)
+            out[p["req"].rid] = d
+        return out
+
+    def _run_batch(self, token, bt, lens, counts) -> np.ndarray:
+        logits, self._caches = self._paged(
+            self.params, self._caches, jnp.asarray(token), jnp.asarray(bt),
+            jnp.asarray(lens), jnp.asarray(counts), None)
+        self.draft_steps += 1
+        return np.asarray(logits)
 
     def propose(self, req: Request, k: int) -> List[int]:
         ctx = request_context(req)
@@ -321,6 +487,8 @@ class DraftModelDrafter(Drafter):
 
     def forget(self, rid: int) -> None:
         self._state.pop(rid, None)
+        self._rows.pop(rid, None)
+        self._lru.pop(rid, None)
 
     def stats(self) -> dict:
         return {"drafter": "draft-model", "model": self.model.cfg.name,

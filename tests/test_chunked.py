@@ -104,6 +104,7 @@ def test_chunked_matches_monolithic_sampled(smollm, mono_outputs):
             _drain(eng, reqs, greedy=False, seed=7)] == sampled
 
 
+@pytest.mark.slow
 def test_chunked_preemption_token_identical(smollm):
     """A pool at ~half the working set forces preemptions (folds) and
     pauses mid-prefill; the chunked engine must still reproduce the

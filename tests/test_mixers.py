@@ -83,6 +83,7 @@ def test_partial_rope_leaves_tail_untouched():
 # MoE invariants (hypothesis)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @given(seed=st.integers(0, 1000), tokens8=st.integers(1, 5),
        topk=st.integers(1, 3))
 @settings(max_examples=15, deadline=None)

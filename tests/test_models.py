@@ -20,7 +20,8 @@ SHAPE = ShapeSpec("smoke", 32, 2, "train")
 # the big-MoE configs) are slow-marked; all keep fast coverage through
 # test_decode_matches_parallel* / test_serving / test_mixers.
 _HEAVY = {"jamba-v0.1-52b", "whisper-small", "arctic-480b",
-          "qwen3-moe-235b-a22b", "qwen2-7b", "rwkv6-1.6b", "internvl2-26b"}
+          "qwen3-moe-235b-a22b", "qwen2-7b", "qwen3-8b", "rwkv6-1.6b",
+          "internvl2-26b"}
 ALL_ARCHS = [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
              for a in ASSIGNED + ["smollm2-135m"]]
 
@@ -133,6 +134,7 @@ def test_chunked_prefill_matches_full():
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_policies_agree_end_to_end():
     """The three codegen policies produce the same model function (the
     unpacked reference forward is computed once, not once per policy)."""

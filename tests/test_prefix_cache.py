@@ -231,6 +231,7 @@ def test_eviction_lru_under_pool_pressure_pins_in_use_pages():
 # allocator-under-sharing property (satellite)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(seed=st.integers(0, 10 ** 6), usable=st.integers(4, 12))
 def test_property_sharing_interleaving_keeps_invariants(seed, usable):
@@ -388,6 +389,7 @@ def test_cache_on_token_identical_and_halves_prefill(smollm, greedy, kw):
         == eng.pool.total_frees
 
 
+@pytest.mark.slow
 def test_fully_cached_prompt_cow_splits_last_page(smollm):
     """A page-aligned, fully-cached prompt admits at cursor L-1 (the last
     position's logits feed the first pick) — the one in-place write into a
@@ -411,6 +413,7 @@ def test_fully_cached_prompt_cow_splits_last_page(smollm):
     assert eng.pool.num_used == 0
 
 
+@pytest.mark.slow
 def test_preempt_resume_recomputes_only_uncached_suffix(smollm):
     """Preemption releases pages into the cache, so a resume's prefill
     covers at most the tokens generated since its last admission plus one

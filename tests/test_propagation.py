@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (MatmulContext, linear_init, linear_apply, make_layout,
@@ -14,6 +15,7 @@ CTX = MatmulContext()
 dims = st.integers(1, 200)
 
 
+@pytest.mark.slow
 @given(m=dims, k=dims, seed=st.integers(0, 100))
 @settings(max_examples=25, deadline=None)
 def test_rms_norm_padding_neutral(m, k, seed):
@@ -27,6 +29,7 @@ def test_rms_norm_padding_neutral(m, k, seed):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 @given(m=dims, k=dims)
 @settings(max_examples=25, deadline=None)
 def test_layer_norm_padding_neutral(m, k):
@@ -56,6 +59,7 @@ def test_padding_invariant_maintained_through_chain():
     assert np.all(data[:, -1, :, 2:, :] == 0)
 
 
+@pytest.mark.slow
 def test_residual_chain_matches_unpacked():
     x = jax.random.normal(jax.random.PRNGKey(0), (2, 17, 100))
     p1 = linear_init(jax.random.PRNGKey(1), 100, 300)

@@ -339,6 +339,7 @@ def test_eos_finishes_early(smollm):
 # lazy allocation + preemption through the engine
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_preemption_recomputation_is_deterministic(smollm):
     """The tentpole contract: a pool too small for both lifetimes forces a
     preemption mid-decode, and the preempted-and-recomputed greedy output
@@ -422,6 +423,7 @@ def test_per_request_sampling_params(smollm):
     assert c1 != h1
 
 
+@pytest.mark.slow
 def test_out_of_pages_drain_terminates(smollm):
     """Sustained OutOfPages pressure: 8 requests whose lifetimes need 4
     pages each contend for 6 pages across 3 slots.  The drain must

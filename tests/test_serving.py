@@ -27,7 +27,9 @@ def smollm_serve():
     return _setup("smollm2-135m")
 
 
-@pytest.mark.parametrize("arch", ["smollm2-135m", "rwkv6-1.6b", "whisper-small"])
+@pytest.mark.parametrize("arch", ["smollm2-135m", "rwkv6-1.6b",
+                                  pytest.param("whisper-small",
+                                               marks=pytest.mark.slow)])
 def test_generate_shapes_and_determinism(arch, smollm_serve):
     cfg, m, params = smollm_serve if arch == "smollm2-135m" else _setup(arch)
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
