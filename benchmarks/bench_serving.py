@@ -66,6 +66,7 @@ import argparse
 import json
 import os
 import time
+from datetime import datetime, timezone
 
 import jax
 import numpy as np
@@ -874,23 +875,39 @@ def main(argv=None):
             report["prefix_cache"]["mono/greedy"]["prefill_ratio"]
 
     if args.json_out != "-" and not (args.smoke and args.json_out is None):
-        # smoke runs don't clobber the tracked perf trajectory unless asked;
-        # partial runs (--skip-*) merge into the existing report instead of
-        # erasing the sections they skipped
+        # smoke runs don't clobber the tracked perf trajectory unless asked.
+        # The file keeps the trajectory, not just the last run: "latest" is
+        # the rolling merged view (partial --skip-* runs update only their
+        # sections), "history" appends one timestamped entry per invocation
+        # so perf across PRs stays recoverable
         path = args.json_out or os.path.join(
             os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
             "BENCH_serving.json")
-        merged = {}
+        data = {}
         if os.path.exists(path):
             try:
                 with open(path) as f:
-                    merged = json.load(f)
+                    data = json.load(f)
             except (OSError, ValueError):
-                merged = {}
-        merged.update(report)
+                data = {}
+        if not isinstance(data, dict):
+            data = {}
+        if "history" not in data:
+            # legacy layout: a flat section dict — keep it as the seed of
+            # the trajectory rather than losing it
+            data = {"latest": data,
+                    "history": ([{"timestamp": None, "report": data}]
+                                if data else [])}
+        data.setdefault("latest", {}).update(report)
+        data["history"].append({
+            "timestamp": datetime.now(timezone.utc).isoformat(
+                timespec="seconds"),
+            "report": report,
+        })
         with open(path, "w") as f:
-            json.dump(merged, f, indent=2, sort_keys=True)
-        print(f"[bench_serving] wrote {path}")
+            json.dump(data, f, indent=2, sort_keys=True)
+        print(f"[bench_serving] wrote {path} "
+              f"({len(data['history'])} history entries)")
     return results
 
 

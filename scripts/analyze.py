@@ -1,0 +1,37 @@
+#!/usr/bin/env python
+"""Run the layout-contract analyzer over the full engine matrix.
+
+Exit status 0 iff every pass is green; any finding prints and fails the
+run, which is what lets ``scripts/tier1.sh --analyze`` gate a PR on the
+serving stack's standing invariants.
+
+    PYTHONPATH=src python scripts/analyze.py            # everything
+    PYTHONPATH=src python scripts/analyze.py --static   # no traffic/trace
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--static", action="store_true",
+                    help="ladder algebra + AST lint only (no jaxpr traces, "
+                         "no sanitized traffic) — seconds instead of minutes")
+    ap.add_argument("--no-traffic", action="store_true",
+                    help="skip the sanitized drains (keep jaxpr traces)")
+    args = ap.parse_args()
+
+    from repro.analysis import run_all
+    report = run_all(traffic=not (args.static or args.no_traffic),
+                     trace=not args.static,
+                     log=lambda m: print(m, flush=True))
+    print(report.format())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,45 @@
+#!/usr/bin/env python
+"""AST invariant lint (analysis pass 4) — stdlib ``ast``, no jax import.
+
+Enforces the syntactic repo rules over ``src/repro/serving/`` and
+``src/repro/kernels/`` (see :mod:`repro.analysis.ast_lint`): allocator
+privacy, usable-pages capacity asserts, no unseeded randomness, kernel
+ref-oracles under test.  Exit 1 on any finding.
+
+    python scripts/lint_invariants.py                 # default tree
+    python scripts/lint_invariants.py src/repro       # a wider sweep
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files/dirs to lint (default: serving + kernels)")
+    ap.add_argument("--no-oracles", action="store_true",
+                    help="skip the kernel-oracle rule (tests dir scan)")
+    args = ap.parse_args()
+
+    from repro.analysis.ast_lint import lint_kernel_oracles, lint_paths
+
+    serving = REPO / "src" / "repro" / "serving"
+    kernels = REPO / "src" / "repro" / "kernels"
+    paths = args.paths or [serving, kernels]
+    findings = lint_paths(paths, serving_root=serving)
+    if not args.no_oracles and (REPO / "tests").is_dir():
+        findings += lint_kernel_oracles(kernels, REPO / "tests")
+
+    for f in findings:
+        print(f.format())
+    print(f"{len(findings)} finding(s)" if findings else "OK — no findings")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

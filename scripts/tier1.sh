@@ -14,13 +14,21 @@
 #   lazy-allocation/preemption regressions and any chunked-vs-monolithic,
 #   spec-vs-baseline, or cache-on-vs-cache-off output mismatch (greedy or
 #   sampled) fail the run without the full bench)
+# With the layout-contract analyzer:  ./scripts/tier1.sh --analyze
+#   (runs all four analysis passes — shape-ladder linter, KV-write
+#   aliasing pass, recompile-hazard detector, AST invariant lint — plus
+#   a sanitized drain over every engine configuration via
+#   scripts/analyze.py; any finding fails the run)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 BENCH_SMOKE=0
+ANALYZE=0
 ARGS=()
 for a in "$@"; do
-  if [[ "$a" == "--bench-smoke" ]]; then BENCH_SMOKE=1; else ARGS+=("$a"); fi
+  if [[ "$a" == "--bench-smoke" ]]; then BENCH_SMOKE=1;
+  elif [[ "$a" == "--analyze" ]]; then ANALYZE=1;
+  else ARGS+=("$a"); fi
 done
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
@@ -29,4 +37,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 if [[ "$BENCH_SMOKE" == 1 ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_serving.py --smoke --skip-throughput
+fi
+
+if [[ "$ANALYZE" == 1 ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python scripts/analyze.py
 fi

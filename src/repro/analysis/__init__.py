@@ -1,0 +1,41 @@
+"""Layout-contract analyzer for the serving stack (the verifier layer).
+
+The compiled serving stack rests on contracts MLIR-style codegen would
+check in its type system and verifier passes; this package is the
+equivalent for the jaxpr/engine stack.  Four passes plus a runtime mode:
+
+1. ``shapes``    — shape-ladder linter (m_r alignment, geometric ladder
+                   membership, static dims in every step-family jaxpr);
+2. ``aliasing``  — KV-write aliasing pass (every pool write addressed
+                   through the block-table gather with the trash-page
+                   route) + the dynamic refcount-ledger audit;
+3. ``retrace``   — recompile-hazard detector (attributes any post-warmup
+                   XLA trace to the argument leaf that caused it);
+4. ``ast_lint``  — AST invariant lint (allocator privacy, capacity
+                   asserts, unseeded randomness, kernel oracles).
+
+``sanitize`` wires the dynamic halves of 1–2 onto the pool write path at
+runtime (``REPRO_SANITIZE=1``).  ``runner.run_all`` drives everything
+over the shipped engine-configuration matrix; ``scripts/analyze.py`` /
+``scripts/tier1.sh --analyze`` is the CI entry point.
+"""
+
+from repro.analysis.aliasing import (check_pool_consistency,
+                                     lint_engine_aliasing)
+from repro.analysis.ast_lint import (lint_file, lint_kernel_oracles,
+                                     lint_paths)
+from repro.analysis.report import AnalysisReport, Finding
+from repro.analysis.retrace import RetraceDetector
+from repro.analysis.runner import analyze_engine, run_all, run_ast_lint
+from repro.analysis.sanitize import SanitizerError, StepSanitizer, install
+from repro.analysis.shapes import lint_engine_shapes, step_families
+
+__all__ = [
+    "AnalysisReport", "Finding",
+    "lint_engine_shapes", "step_families",
+    "lint_engine_aliasing", "check_pool_consistency",
+    "RetraceDetector",
+    "lint_paths", "lint_file", "lint_kernel_oracles",
+    "SanitizerError", "StepSanitizer", "install",
+    "analyze_engine", "run_all", "run_ast_lint",
+]

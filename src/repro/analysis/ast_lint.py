@@ -1,0 +1,278 @@
+"""Pass 4 — AST invariant lint (stdlib ``ast``, no runtime, no deps).
+
+Repo rules that no runtime test can see, enforced syntactically over
+``src/repro/serving/`` and ``src/repro/kernels/``:
+
+* **allocator-privacy** — the free list and refcount dict
+  (``._free``/``._ref``) are mutated *only* inside ``kv_cache.py``.  A
+  ``pool._free.append(p)`` anywhere else bypasses the double-free check
+  and the refcount ledger; reads are allowed (stats, analysis), writes
+  are not.
+* **capacity-asserts** — scheduler-side admission/growth asserts must
+  reason in ``usable_pages``/``num_available`` (free + reclaimable
+  prefix-cache pages), never raw ``free_pages``/``num_free``: an assert
+  on the raw free list spuriously fires exactly when the cache is doing
+  its job holding spare pages.
+* **unseeded-randomness** — no hidden-global-RNG draws (stdlib
+  ``random.*`` module functions, ``np.random.*`` legacy functions,
+  ``default_rng()``/``RandomState()`` with no seed).  Serving is
+  deterministic by construction — token-identity contracts and the
+  (seed, rid, position) sampling rule both die the day an unseeded draw
+  sneaks in.  Explicit generators (``np.random.Philox(seed)``,
+  ``jax.random`` keys) are fine.
+* **kernel-oracle** — every Pallas kernel package
+  (``kernels/*/kernel.py``) keeps a ``ref.py`` jnp oracle *and* some
+  test imports it (the module, or a name it defines): the oracle is the
+  kernel's spec, and an unimported spec rots.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis.report import Finding
+
+__all__ = ["lint_paths", "lint_file", "lint_kernel_oracles"]
+
+_PASS = "ast-lint"
+
+_PRIVATE_ATTRS = frozenset({"_free", "_ref"})
+_MUTATORS = frozenset({"append", "extend", "insert", "pop", "remove",
+                       "clear", "update", "setdefault", "popitem",
+                       "__setitem__", "sort", "reverse"})
+_RAW_CAPACITY = frozenset({"free_pages", "num_free"})
+
+_NP_UNSEEDED = frozenset({
+    "random", "rand", "randn", "randint", "random_integers", "choice",
+    "shuffle", "permutation", "uniform", "normal", "standard_normal",
+    "beta", "binomial", "poisson", "exponential", "gamma", "sample",
+    "ranf", "random_sample", "bytes", "seed",
+})
+_STDLIB_UNSEEDED = frozenset({
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "normalvariate", "getrandbits",
+    "seed", "betavariate", "expovariate",
+})
+
+
+def _dotted(node) -> Optional[List[str]]:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+class _FileLinter(ast.NodeVisitor):
+    def __init__(self, path: Path, *, allocator_owner: bool,
+                 serving_file: bool):
+        self.path = path
+        self.allocator_owner = allocator_owner
+        self.serving_file = serving_file
+        self.findings: List[Finding] = []
+        self._numpy_aliases = {"numpy"}      # names that mean the numpy module
+        self._stdlib_random_aliases = set()  # names that mean stdlib random
+
+    def _add(self, rule: str, node, message: str) -> None:
+        self.findings.append(Finding(
+            _PASS, rule, f"{self.path}:{getattr(node, 'lineno', '?')}",
+            message))
+
+    # ---- import tracking (for the randomness rule) -------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            name = a.asname or a.name.split(".")[0]
+            if a.name == "random":
+                self._stdlib_random_aliases.add(name)
+            elif a.name.split(".")[0] == "numpy":
+                self._numpy_aliases.add(name)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module in ("random",):
+            for a in node.names:
+                if a.name in _STDLIB_UNSEEDED:
+                    self._add("unseeded-randomness", node,
+                              f"'from random import {a.name}' pulls a "
+                              f"global-state RNG draw into deterministic "
+                              f"serving code — use a seeded "
+                              f"np.random.Generator or jax.random key")
+        self.generic_visit(node)
+
+    # ---- allocator privacy -------------------------------------------
+    def _private_attr(self, node) -> Optional[str]:
+        if isinstance(node, ast.Attribute) and node.attr in _PRIVATE_ATTRS:
+            return node.attr
+        if isinstance(node, ast.Subscript):
+            return self._private_attr(node.value)
+        return None
+
+    def _flag_mutation(self, node, attr: str) -> None:
+        if not self.allocator_owner:
+            self._add("allocator-privacy", node,
+                      f"mutation of allocator-private '.{attr}' outside "
+                      f"kv_cache.py — free-list/refcount writes bypass the "
+                      f"double-free check and the ledger; go through "
+                      f"PagedKVPool.alloc/share/free/cow")
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            attr = self._private_attr(t)
+            if attr:
+                self._flag_mutation(node, attr)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        attr = self._private_attr(node.target)
+        if attr:
+            self._flag_mutation(node, attr)
+        self.generic_visit(node)
+
+    def visit_Delete(self, node: ast.Delete) -> None:
+        for t in node.targets:
+            attr = self._private_attr(t)
+            if attr:
+                self._flag_mutation(node, attr)
+        self.generic_visit(node)
+
+    # ---- calls: mutating methods + unseeded randomness ---------------
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        if (isinstance(fn, ast.Attribute) and fn.attr in _MUTATORS):
+            attr = self._private_attr(fn.value)
+            if attr:
+                self._flag_mutation(node, attr)
+
+        parts = _dotted(fn)
+        if parts:
+            self._check_random_call(node, parts)
+        self.generic_visit(node)
+
+    def _check_random_call(self, node, parts: List[str]) -> None:
+        head, tail = parts[0], parts[-1]
+        if (head in self._stdlib_random_aliases and len(parts) == 2
+                and tail in _STDLIB_UNSEEDED):
+            self._add("unseeded-randomness", node,
+                      f"stdlib '{'.'.join(parts)}(...)' draws from the "
+                      f"hidden global RNG — serving determinism needs an "
+                      f"explicitly seeded generator")
+            return
+        is_np_random = (len(parts) >= 3 and head in self._numpy_aliases
+                        and parts[1] == "random")
+        if not is_np_random:
+            return
+        if tail in _NP_UNSEEDED:
+            self._add("unseeded-randomness", node,
+                      f"'{'.'.join(parts)}(...)' uses numpy's legacy "
+                      f"global RNG — construct a seeded "
+                      f"np.random.Generator(np.random.Philox(seed)) "
+                      f"instead")
+        elif tail in ("default_rng", "RandomState") and not (node.args or
+                                                             node.keywords):
+            self._add("unseeded-randomness", node,
+                      f"'{'.'.join(parts)}()' without a seed is "
+                      f"entropy-seeded — pass an explicit seed")
+
+    # ---- capacity asserts --------------------------------------------
+    def visit_Assert(self, node: ast.Assert) -> None:
+        if self.serving_file:
+            for sub in ast.walk(node.test):
+                if (isinstance(sub, ast.Attribute)
+                        and sub.attr in _RAW_CAPACITY):
+                    self._add("capacity-asserts", node,
+                              f"assert reasons about raw '.{sub.attr}' — "
+                              f"use usable_pages/num_available: the free "
+                              f"list legitimately shrinks while the prefix "
+                              f"cache holds reclaimable pages, so this "
+                              f"assert fires exactly when the cache works")
+        self.generic_visit(node)
+
+
+def lint_file(path: Path, *, serving_root: Optional[Path] = None
+              ) -> List[Finding]:
+    path = Path(path)
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:
+        return [Finding(_PASS, "syntax", f"{path}:{e.lineno}",
+                        f"unparseable: {e.msg}")]
+    serving_file = (serving_root is not None
+                    and serving_root in path.resolve().parents)
+    linter = _FileLinter(path, allocator_owner=path.name == "kv_cache.py",
+                         serving_file=serving_file)
+    linter.visit(tree)
+    return linter.findings
+
+
+def lint_paths(paths, *, serving_root: Optional[Path] = None
+               ) -> List[Finding]:
+    findings: List[Finding] = []
+    for root in paths:
+        root = Path(root)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for p in files:
+            findings.extend(lint_file(p, serving_root=serving_root))
+    return findings
+
+
+def _top_level_names(tree: ast.Module) -> set:
+    names = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+    return names
+
+
+def lint_kernel_oracles(kernels_dir, tests_dir) -> List[Finding]:
+    """Every kernel package (has ``kernel.py``) must keep a ``ref.py``
+    oracle that some test imports — the module itself or a name defined
+    in it."""
+    findings: List[Finding] = []
+    kernels_dir, tests_dir = Path(kernels_dir), Path(tests_dir)
+    test_imports = []          # (module, names) per ImportFrom/Import
+    for tf in sorted(tests_dir.glob("**/*.py")):
+        try:
+            tree = ast.parse(tf.read_text(), filename=str(tf))
+        except SyntaxError:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module:
+                test_imports.append((node.module,
+                                     {a.name for a in node.names}))
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    test_imports.append((a.name, set()))
+
+    for pkg in sorted(p for p in kernels_dir.iterdir()
+                      if p.is_dir() and (p / "kernel.py").exists()):
+        ref = pkg / "ref.py"
+        where = str(pkg)
+        if not ref.exists():
+            findings.append(Finding(
+                _PASS, "kernel-oracle", where,
+                f"kernel package '{pkg.name}' has no ref.py — every Pallas "
+                f"kernel needs a jnp oracle as its executable spec"))
+            continue
+        ref_names = _top_level_names(ast.parse(ref.read_text()))
+        ref_mod = f"repro.kernels.{pkg.name}.ref"
+        pkg_mod = f"repro.kernels.{pkg.name}"
+        imported = any(
+            mod == ref_mod or mod.startswith(ref_mod + ".")
+            or (mod == pkg_mod and names & ref_names)
+            for mod, names in test_imports)
+        if not imported:
+            findings.append(Finding(
+                _PASS, "kernel-oracle", where,
+                f"no test imports {ref_mod} (or a name it defines) — the "
+                f"oracle is the kernel's spec and must stay under test"))
+    return findings

@@ -1,0 +1,272 @@
+"""Jaxpr walking primitives shared by the analysis passes.
+
+Two capabilities, both pure functions of a ``ClosedJaxpr``:
+
+* :func:`iter_eqns` — depth-first traversal of every eqn including those
+  inside sub-jaxprs (``pjit``, ``scan``, ``cond`` branches, remat, custom
+  derivatives), with a ``path`` string locating each eqn.  The shape
+  linter uses it to assert every aval dim is a concrete int.
+
+* :class:`TaintWalker` — forward label propagation ("taint") with a mini
+  constant folder.  Seed the top-level invars with role labels (e.g.
+  ``pages``, ``block_tables``, ``validity``) and the walker pushes the
+  union of input labels onto every eqn's outputs, recursing into
+  sub-jaxprs by zipping outer operands onto inner invars.  Two special
+  rules carry the serving stack's aliasing contract:
+
+  - ``select_n`` whose predicate is validity-derived and one of whose
+    cases is a constant zero gets the extra label ``trash0`` — that is
+    the lowered form of ``jnp.where(valid, page, 0)``, the trash-page
+    guard.  The zero reaches the select as a bare ``Literal 0`` operand
+    of the ``_where`` pjit and then flows through
+    ``convert_element_type``/``broadcast_in_dim``, which is why the
+    walker needs the constant folder, not just literal inspection at the
+    select.
+  - every ``scatter*`` / ``dynamic_update_slice`` eqn is recorded as a
+    :class:`WriteSite` with the labels of its operand, indices and
+    updates plus its gather/scatter mode — the KV-aliasing pass then
+    asserts each pool write is indexed by ``{block_tables, trash0}``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Set
+
+import numpy as np
+
+__all__ = ["WriteSite", "TaintWalker", "iter_eqns", "eqn_where",
+           "unwrap_jaxpr"]
+
+# roles whose presence in a select_n predicate marks it as the trash guard
+VALIDITY_ROLES = frozenset({"validity"})
+TRASH_LABEL = "trash0"
+
+# shape-preserving-ish prims through which a known constant keeps its value
+# (zero-ness is all we care about, so broadcasts are value-preserving too)
+_CONST_TRANSPARENT = frozenset({
+    "convert_element_type", "broadcast_in_dim", "reshape", "copy",
+    "squeeze", "expand_dims", "stop_gradient",
+})
+_MAX_CONST_SIZE = 256   # don't drag big arrays through the const env
+
+
+def unwrap_jaxpr(j):
+    """ClosedJaxpr-or-Jaxpr -> (Jaxpr, consts)."""
+    inner = getattr(j, "jaxpr", j)
+    consts = list(getattr(j, "consts", ()) or ())
+    return inner, consts
+
+
+def _sub_jaxprs(eqn):
+    """All jaxpr-valued params of an eqn, as (param_name, jaxpr_like)."""
+    out = []
+    for name, val in eqn.params.items():
+        if hasattr(val, "eqns") or hasattr(val, "jaxpr"):
+            out.append((name, val))
+        elif isinstance(val, (tuple, list)):
+            for i, v in enumerate(val):
+                if hasattr(v, "eqns") or hasattr(v, "jaxpr"):
+                    out.append((f"{name}[{i}]", v))
+    return out
+
+
+def eqn_where(eqn) -> str:
+    """Best-effort user-code call site of an eqn, as ``file:line``."""
+    try:
+        from jax._src import source_info_util
+        frame = source_info_util.user_frame(eqn.source_info)
+        if frame is not None:
+            return f"{frame.file_name}:{frame.start_line}"
+    except Exception:
+        pass
+    return "<unknown call site>"
+
+
+def iter_eqns(closed, path: str = "top"):
+    """Yield ``(path, eqn)`` for every eqn, recursing into sub-jaxprs."""
+    inner, _ = unwrap_jaxpr(closed)
+    for eqn in inner.eqns:
+        yield path, eqn
+        for pname, sub in _sub_jaxprs(eqn):
+            sub_path = f"{path}/{eqn.primitive.name}" \
+                       + (f".{pname}" if pname not in ("jaxpr", "call_jaxpr")
+                          else "")
+            yield from iter_eqns(sub, sub_path)
+
+
+@dataclasses.dataclass
+class WriteSite:
+    """One in-place write eqn (scatter / dynamic_update_slice) seen by the
+    taint walker, with the provenance labels of each operand group."""
+
+    prim: str
+    path: str
+    where: str
+    operand_labels: Set[str]
+    index_labels: Set[str]
+    update_labels: Set[str]
+    mode: Optional[str]
+
+    def writes(self, label: str) -> bool:
+        return label in self.operand_labels
+
+
+def _is_literal(v) -> bool:
+    return hasattr(v, "val")        # core.Literal; Vars have no .val
+
+
+def _const_of(v, cenv):
+    if _is_literal(v):
+        try:
+            a = np.asarray(v.val)
+            return a if a.size <= _MAX_CONST_SIZE else None
+        except Exception:
+            return None
+    return cenv.get(v)
+
+
+def _all_zero(a) -> bool:
+    return a is not None and bool((np.asarray(a) == 0).all())
+
+
+class TaintWalker:
+    """Forward label propagation over a closed jaxpr (see module doc)."""
+
+    def __init__(self, validity_roles=VALIDITY_ROLES):
+        self.validity_roles = frozenset(validity_roles)
+        self.write_sites: List[WriteSite] = []
+        self.out_labels: List[Set[str]] = []   # labels of top-level outvars
+
+    # -- env helpers ---------------------------------------------------
+    @staticmethod
+    def _labels(v, env) -> Set[str]:
+        if _is_literal(v):
+            return set()
+        return env.get(v, set())
+
+    def run(self, closed, arg_labels: List[Optional[Set[str]]]):
+        """``arg_labels`` aligns with the top-level flat invars."""
+        inner, consts = unwrap_jaxpr(closed)
+        if len(arg_labels) != len(inner.invars):
+            raise ValueError(
+                f"taint walk: {len(arg_labels)} labels for "
+                f"{len(inner.invars)} invars")
+        env, cenv = {}, {}
+        for cv, cval in zip(inner.constvars, consts):
+            env[cv] = set()
+            self._seed_const(cenv, cv, cval)
+        for v, lab in zip(inner.invars, arg_labels):
+            env[v] = set(lab or ())
+        self._walk(inner, env, cenv, "top")
+        self.out_labels = [self._labels(ov, env) for ov in inner.outvars]
+        return self
+
+    @staticmethod
+    def _seed_const(cenv, var, val):
+        try:
+            a = np.asarray(val)
+            if a.size <= _MAX_CONST_SIZE:
+                cenv[var] = a
+        except Exception:
+            pass
+
+    # -- recursion -----------------------------------------------------
+    def _recurse(self, sub, in_info, path):
+        """in_info: list of (labels, const) aligned with sub's invars.
+        Returns (labels, const) per sub outvar."""
+        inner, consts = unwrap_jaxpr(sub)
+        env, cenv = {}, {}
+        for cv, cval in zip(inner.constvars, consts):
+            env[cv] = set()
+            self._seed_const(cenv, cv, cval)
+        for iv, (lab, const) in zip(inner.invars, in_info):
+            env[iv] = set(lab or ())
+            if const is not None:
+                cenv[iv] = const
+        self._walk(inner, env, cenv, path)
+        return [(self._labels(ov, env), _const_of(ov, cenv))
+                for ov in inner.outvars]
+
+    def _walk(self, jaxpr, env, cenv, path):
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            in_info = [(self._labels(v, env), _const_of(v, cenv))
+                       for v in eqn.invars]
+            union: Set[str] = set()
+            for lab, _ in in_info:
+                union |= lab
+
+            subs = _sub_jaxprs(eqn)
+            if prim == "cond" and subs:
+                # invars = [pred, *operands]; every branch sees the operands
+                out = None
+                for pname, br in subs:
+                    r = self._recurse(br, in_info[1:], f"{path}/cond.{pname}")
+                    if out is None:
+                        out = [(set(lab), None) for lab, _ in r]
+                    else:
+                        for acc, (lab, _) in zip(out, r):
+                            acc[0].update(lab)
+                pred_labels = in_info[0][0]
+                for ov, (lab, _) in zip(eqn.outvars, out or []):
+                    env[ov] = lab | pred_labels
+                continue
+
+            if subs and len(subs) == 1:
+                inner, _ = unwrap_jaxpr(subs[0][1])
+                if len(inner.invars) == len(eqn.invars):
+                    # pjit / scan / remat / custom_*: positional 1:1 zip of
+                    # outer operands onto inner invars and back for outvars
+                    r = self._recurse(subs[0][1], in_info, f"{path}/{prim}")
+                    if len(r) == len(eqn.outvars):
+                        for ov, (lab, const) in zip(eqn.outvars, r):
+                            env[ov] = lab
+                            if const is not None:
+                                cenv[ov] = const
+                        continue
+            if subs:
+                # unknown higher-order prim (while, ...): conservative —
+                # every output tainted by every input; no const, no recurse
+                # (a pool write hidden here would surface as a missing
+                # write site, which the aliasing pass reports)
+                for ov in eqn.outvars:
+                    env[ov] = set(union)
+                continue
+
+            # ---- first-order prims ----
+            out_labels = set(union)
+            out_const = None
+
+            if prim in _CONST_TRANSPARENT and in_info:
+                out_const = in_info[0][1]
+            elif prim == "select_n" and len(eqn.invars) >= 3:
+                pred_labels = in_info[0][0]
+                case_consts = [c for _, c in in_info[1:]]
+                if (pred_labels & self.validity_roles
+                        and any(_all_zero(c) for c in case_consts)):
+                    out_labels.add(TRASH_LABEL)
+            elif prim.startswith("scatter"):
+                operand_l, idx_l, upd_l = (in_info[0][0],
+                                           in_info[1][0],
+                                           in_info[2][0] if len(in_info) > 2
+                                           else set())
+                self.write_sites.append(WriteSite(
+                    prim=prim, path=path, where=eqn_where(eqn),
+                    operand_labels=operand_l, index_labels=idx_l,
+                    update_labels=upd_l,
+                    mode=str(eqn.params.get("mode", ""))))
+            elif prim == "dynamic_update_slice":
+                operand_l, upd_l = in_info[0][0], in_info[1][0]
+                idx_l = set()
+                for lab, _ in in_info[2:]:
+                    idx_l |= lab
+                self.write_sites.append(WriteSite(
+                    prim=prim, path=path, where=eqn_where(eqn),
+                    operand_labels=operand_l, index_labels=idx_l,
+                    update_labels=upd_l, mode=None))
+
+            for ov in eqn.outvars:
+                env[ov] = out_labels
+                if out_const is not None:
+                    cenv[ov] = out_const

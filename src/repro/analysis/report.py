@@ -1,0 +1,73 @@
+"""Findings and reports for the layout-contract analyzer.
+
+Every pass — the shape-ladder linter, the KV-write aliasing pass, the
+recompile-hazard detector, the AST invariant lint, and the runtime
+sanitizer — speaks one currency: a :class:`Finding` naming the pass, the
+rule that fired, *where* (an eqn + call site, a ``file:line``, or an
+engine attribute), and a message precise enough to act on.  A pass that
+returns no findings is **green**; ``scripts/analyze.py`` exits non-zero
+on any finding, which is what lets ``tier1.sh --analyze`` gate a PR on
+the serving stack's standing invariants instead of on example-based
+tests alone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+__all__ = ["Finding", "AnalysisReport"]
+
+
+@dataclasses.dataclass
+class Finding:
+    """One contract violation.
+
+    ``pass_name``: which analyzer produced it (``shape-ladder``,
+    ``kv-aliasing``, ``retrace``, ``ast-lint``, ``sanitize``,
+    ``pool-ledger``).  ``rule``: the specific invariant within the pass.
+    ``where``: the most precise location available — a ``file:line`` for
+    AST findings, ``primitive @ file:line`` for jaxpr eqns, an engine/
+    config label otherwise.  ``detail`` carries the evidence (the shape
+    that missed the ladder, the argument that forced a retrace, ...).
+    """
+
+    pass_name: str
+    rule: str
+    where: str
+    message: str
+    detail: Optional[dict] = None
+
+    def format(self) -> str:
+        s = f"[{self.pass_name}/{self.rule}] {self.where}: {self.message}"
+        if self.detail:
+            kv = ", ".join(f"{k}={v!r}" for k, v in sorted(self.detail.items()))
+            s += f"  ({kv})"
+        return s
+
+
+class AnalysisReport:
+    """An ordered collection of findings across passes and configs."""
+
+    def __init__(self):
+        self.findings: List[Finding] = []
+        self.sections: List[str] = []     # labels of everything analyzed,
+                                          # green or not (coverage record)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def extend(self, findings, section: Optional[str] = None) -> None:
+        self.findings.extend(findings)
+        if section is not None:
+            self.sections.append(section)
+
+    def format(self) -> str:
+        lines = [f"analyzed: {', '.join(self.sections) or '(nothing)'}"]
+        if self.ok:
+            lines.append("OK — no findings")
+        else:
+            lines.append(f"{len(self.findings)} finding(s):")
+            lines += ["  " + f.format() for f in self.findings]
+        return "\n".join(lines)

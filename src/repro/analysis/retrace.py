@@ -1,0 +1,95 @@
+"""Pass 3 — the recompile-hazard detector.
+
+``Engine.warmup`` pre-compiles every step shape, and the standing
+contract is *zero* XLA traces afterwards.  The existing regression tests
+assert that boolean; this pass makes a violation actionable: the model's
+``trace_log`` (see :meth:`ReproModel.trace_log`) records per-trace
+argument signatures, and :class:`RetraceDetector` diffs every
+post-``mark()`` trace against the closest earlier trace of the same
+kind, attributing the retrace to the exact argument leaf whose shape,
+dtype, or weak_type changed.  The canonical hazard it names: a python
+scalar leaking into a step call — warmup traced ``pos: (), int32,
+weak_type=False``; the leak retraces at ``weak_type=True``, an invisible
+diff in a plain repr but a distinct jit cache key.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.report import Finding
+
+__all__ = ["RetraceDetector", "diff_signatures"]
+
+_PASS = "retrace"
+
+
+def diff_signatures(before: dict, after: dict) -> List[str]:
+    """Human-readable per-argument diffs between two trace signatures."""
+    out = []
+    for key in sorted(set(before) | set(after)):
+        b, a = before.get(key), after.get(key)
+        if b == a:
+            continue
+        if b is None:
+            out.append(f"{key}: absent -> {a}")
+        elif a is None:
+            out.append(f"{key}: {b} -> absent")
+        else:
+            fields = ("shape", "dtype", "weak_type")
+            parts = [f"{fn} {bv!r} -> {av!r}"
+                     for fn, bv, av in zip(fields, b, a) if bv != av]
+            out.append(f"{key}: " + ", ".join(parts))
+    return out
+
+
+class RetraceDetector:
+    """Watch a model's jitted steps for post-warmup retraces.
+
+    Usage::
+
+        det = RetraceDetector(model)
+        engine.warmup()
+        det.mark()          # everything traced so far is legitimate
+        ... traffic ...
+        findings = det.findings()   # [] unless something retraced
+    """
+
+    def __init__(self, model):
+        self.model = model
+        self._mark = len(model.trace_log)
+
+    def mark(self) -> None:
+        self._mark = len(self.model.trace_log)
+
+    def retraces(self) -> List[dict]:
+        return self.model.trace_log[self._mark:]
+
+    def findings(self, label: str = "model") -> List[Finding]:
+        log = self.model.trace_log
+        out: List[Finding] = []
+        for i in range(self._mark, len(log)):
+            entry = log[i]
+            prior = [e for e in log[:i] if e["kind"] == entry["kind"]]
+            where = f"{label} jit_step({entry['kind']!r})"
+            if not prior:
+                out.append(Finding(
+                    _PASS, "unwarmed-kind", where,
+                    f"first-ever trace of kind {entry['kind']!r} happened "
+                    f"after warmup — this step family was never warmed"))
+                continue
+            # attribute against the *closest* prior signature: the one
+            # with the fewest differing leaves is the cache entry this
+            # call just missed
+            diffs = [(diff_signatures(p["args"], entry["args"]), p)
+                     for p in prior]
+            diffs.sort(key=lambda d: len(d[0]))
+            best, _ = diffs[0]
+            out.append(Finding(
+                _PASS, "post-warmup-trace", where,
+                f"XLA retrace after warmup; closest warmed signature "
+                f"differs in {len(best)} leaf/leaves: "
+                + "; ".join(best[:4])
+                + ("; ..." if len(best) > 4 else ""),
+                detail={"kind": entry["kind"], "diff": best}))
+        return out

@@ -18,8 +18,33 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["ragged_attention_ref"]
+__all__ = ["ragged_attention_ref", "flat_write_destinations"]
+
+
+def flat_write_destinations(block_tables: np.ndarray, row_ids: np.ndarray,
+                            q_pos: np.ndarray, page_tokens: int):
+    """Host-side mirror of the flat scatter's addressing rule
+    (:func:`repro.models.attention.flat_paged_kv_update`): position ``i``
+    of the stream writes page ``block_tables[row_ids[i], q_pos[i] // T]``
+    at offset ``q_pos[i] % T``; ``row_ids[i] < 0`` routes to trash page 0.
+    Returns ``(pages, offsets, valid)``, each ``[W]``.
+
+    This is the write-side half of the contract the oracle above reads
+    back, kept beside it so the two can't drift — the runtime sanitizer
+    (``analysis.sanitize``) recomputes every step's destinations through
+    this function and asserts each written page is private (``ref == 1``)
+    and inside the pool."""
+    bt = np.asarray(block_tables)
+    row_ids = np.asarray(row_ids)
+    q_pos = np.asarray(q_pos)
+    valid = row_ids >= 0
+    row = np.maximum(row_ids, 0)
+    slot = np.minimum(q_pos // page_tokens, bt.shape[1] - 1)
+    pages = np.where(valid, bt[row, slot], 0)
+    offsets = np.where(valid, q_pos % page_tokens, 0)
+    return pages, offsets, valid
 
 
 def ragged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,

@@ -7,6 +7,7 @@ the dry-run launcher and the benchmarks.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Optional, Tuple
 
 import jax
@@ -23,6 +24,38 @@ from repro.models.common import embed_apply
 Array = jnp.ndarray
 
 __all__ = ["ReproModel", "build_model"]
+
+
+_TRACE_LOG_TREE_CAP = 8   # args with more leaves are summarized as one entry
+
+
+def _describe_trace_args(names, args, kwargs) -> dict:
+    """Per-argument (shape, dtype, weak_type) signatures of one trace,
+    keyed by ``argname`` + pytree path.  Large pytrees (params) collapse
+    to one summary entry — retrace attribution needs "which argument
+    changed", not five hundred weight leaves."""
+    desc = {}
+    items = list(zip(names, args)) + sorted(kwargs.items())
+    for name, val in items:
+        leaves, _ = jax.tree_util.tree_flatten_with_path(val)
+        sigs = []
+        for path, leaf in leaves:
+            aval = getattr(leaf, "aval", None)
+            if aval is not None:
+                sigs.append((jax.tree_util.keystr(path), tuple(aval.shape),
+                             str(aval.dtype),
+                             bool(getattr(aval, "weak_type", False))))
+            else:
+                sigs.append((jax.tree_util.keystr(path), "static",
+                             repr(type(leaf).__name__), False))
+        if len(sigs) > _TRACE_LOG_TREE_CAP:
+            desc[name] = (f"<pytree:{len(sigs)} leaves>",
+                          f"sig_hash={hash(tuple(sigs)) & 0xffffffff:#x}",
+                          False)
+        else:
+            for p, shp, dt, weak in sigs:
+                desc[name + p] = (shp, dt, weak)
+    return desc
 
 
 def _xent(logits: Array, labels: Array, z_loss: float) -> Tuple[Array, dict]:
@@ -256,6 +289,20 @@ class ReproModel:
             self._trace_counts = {"decode": 0, "paged": 0, "flat": 0}
         return self._trace_counts
 
+    @property
+    def trace_log(self) -> list:
+        """One entry per XLA trace of a jitted step: ``{"kind", "args"}``
+        where ``args`` maps argument (pytree-path) names to (shape, dtype,
+        weak_type).  ``trace_counts`` answers *whether* a retrace happened;
+        this log answers *which argument caused it* — the recompile-hazard
+        analyzer (:mod:`repro.analysis.retrace`) diffs post-warmup entries
+        against earlier same-kind signatures and names the leaf that
+        differs (e.g. a python scalar leaking in as a weak-typed 0 where
+        warmup traced a strong ``int32``)."""
+        if not hasattr(self, "_trace_log"):
+            self._trace_log = []
+        return self._trace_log
+
     def jit_step(self, kind: str = "decode"):
         """Cached jitted step (donating the cache): shared by every Engine
         built over this model, so serving sessions amortize compilations the
@@ -268,9 +315,18 @@ class ReproModel:
                   "paged": self.paged_decode_step,
                   "flat": self.flat_decode_step}[kind]
             counts = self.trace_counts
+            log = self.trace_log
+            names = [p.name for p in
+                     inspect.signature(fn).parameters.values()]
 
             def counted(*args, _fn=fn, _kind=kind, **kwargs):
                 counts[_kind] += 1       # runs at trace time only
+                try:
+                    log.append({"kind": _kind,
+                                "args": _describe_trace_args(names, args,
+                                                             kwargs)})
+                except Exception:        # the recorder must never be the
+                    pass                 # reason a trace fails
                 return _fn(*args, **kwargs)
 
             self._jit_cache[kind] = jax.jit(counted, donate_argnums=(1,))

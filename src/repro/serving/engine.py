@@ -95,6 +95,7 @@ prefill) still use the static-batch path (``generate_static``).
 
 from __future__ import annotations
 
+import os
 import time
 from typing import List, Optional
 
@@ -284,6 +285,14 @@ class Engine:
                                          sharding.named(mesh, specs))
         self._paged_step = model.jit_step("paged")
         self._flat_step = model.jit_step("flat") if self.flat else None
+        # opt-in runtime sanitizer (analysis.sanitize): wraps the jitted
+        # steps with host-side pool-write contract checks — every written
+        # page private (ref == 1), in range, never the trash page, and
+        # every step width a declared ladder member
+        self.sanitizer = None
+        if os.environ.get("REPRO_SANITIZE", "0") not in ("", "0"):
+            from repro.analysis.sanitize import install as _install_sanitizer
+            _install_sanitizer(self)
 
     def _copy_page(self, src: int, dst: int) -> None:
         """Device-side copy-on-write: duplicate page ``src`` into ``dst``

@@ -159,6 +159,25 @@ class PagedKVPool:
     def is_shared(self, page: int) -> bool:
         return self._ref.get(page, 0) > 1
 
+    def sequences(self) -> List["SequencePages"]:
+        """Live block tables registered with this pool (weakly held)."""
+        return [s for s in self._seqs]
+
+    def holders(self, page: int) -> List:
+        """Owner ids (request ids, where known) of the live sequences whose
+        block table holds ``page`` — the context a double-free / sanitizer
+        diagnostic needs in the middle of a long drain."""
+        return sorted({s.owner for s in self._seqs
+                       if s.owner is not None and page in s.pages})
+
+    def ledger(self) -> dict:
+        """Read-only snapshot of the allocator state for external audits
+        (:func:`repro.analysis.aliasing.check_pool_consistency`): the
+        refcount map and the free list.  Copies — mutating the allocator
+        stays the privilege of this module (enforced by the AST lint's
+        allocator-privacy rule)."""
+        return {"refs": dict(self._ref), "free": list(self._free)}
+
     def alloc(self) -> int:
         if not self._free and self.reclaimer is not None:
             # LRU eviction under pool pressure: cached-but-unreferenced
@@ -178,17 +197,22 @@ class PagedKVPool:
         place (:meth:`cow` first)."""
         for p in pages:
             assert self._ref.get(p, 0) >= 1, \
-                f"page {p} shared while not allocated — sharing a dead page " \
-                f"would resurrect freed KV"
+                f"page {p} shared while not allocated (ref=0, holders: " \
+                f"{self.holders(p) or 'none'}) — sharing a dead page would " \
+                f"resurrect freed KV"
             self._ref[p] += 1
             self.total_shares += 1
 
     def free(self, pages: Iterable[int]) -> None:
         for p in pages:
-            assert 0 < p < self.num_pages, p
+            assert 0 < p < self.num_pages, \
+                f"page {p} freed outside the pool's usable range " \
+                f"1..{self.num_pages - 1} (page 0 is the trash page)"
             assert p in self._ref, \
-                f"page {p} freed twice (or never allocated) — a double-free " \
-                f"hands one page to two requests and crosses their KV"
+                f"page {p} freed twice (or never allocated): ref=" \
+                f"{self._ref.get(p, 0)}, still held by requests " \
+                f"{self.holders(p) or 'none'} — a double-free hands one " \
+                f"page to two requests and crosses their KV"
             self._ref[p] -= 1
             self.total_frees += 1
             if self._ref[p] == 0:
@@ -244,10 +268,13 @@ class SequencePages:
     cached cursor); :meth:`release`/:meth:`truncate` drop references, not
     necessarily pages.  ``eq=False`` keeps identity hashing so the pool's
     weak registry (``stats()["pages_per_request"]``) can track live
-    tables."""
+    tables.  ``owner`` (the scheduler sets it to the request id) exists
+    purely for diagnostics: allocator asserts and the runtime sanitizer
+    name the requests holding a page via :meth:`PagedKVPool.holders`."""
 
     pool: PagedKVPool
     pages: List[int] = dataclasses.field(default_factory=list)
+    owner: Optional[int] = None
 
     def __post_init__(self):
         self.pool._seqs.add(self)

@@ -193,6 +193,13 @@ class PrefixCache:
             h = key
         return new
 
+    def pages(self) -> List[int]:
+        """Page ids the cache currently holds a reference to — one per
+        node, by construction.  Read-only, for external audits
+        (:func:`repro.analysis.aliasing.check_pool_consistency` balances
+        the pool's refcounts against sequence holders + this list)."""
+        return [n.page for n in self._nodes.values()]
+
     # ------------------------------------------------------------------
     # eviction (also the pool's reclaimer interface)
     # ------------------------------------------------------------------

@@ -114,6 +114,44 @@ never budget-stalled (they are planned before prefill chunks).
 
 ``eager=True`` restores the PR-1 policy (reserve the full lifetime at
 admission; growth never fails) — kept as the benchmark baseline.
+
+Invariants & how they're checked
+--------------------------------
+
+The standing contracts above are machine-enforced, each by a named
+analysis pass (:mod:`repro.analysis`; run all of them via
+``scripts/tier1.sh --analyze``) or test:
+
+  - **m_r alignment** — pages, chunk widths, flat widths, and prefill
+    buckets are whole microkernel tiles from a finite geometric ladder:
+    the shape-ladder linter (``analysis.shapes.lint_engine_shapes``)
+    re-derives each ladder from this contract, diffs it against the
+    engine, and walks every compiled step family's jaxpr asserting all
+    dims static; plus tests/test_flat_step.py's ladder tests.
+  - **zero post-warmup traces** — ``Engine.warmup`` compiles every
+    reachable shape: the recompile-hazard detector
+    (``analysis.retrace.RetraceDetector``) diffs the model's per-trace
+    argument signatures after ``mark()`` and names the leaf (shape/
+    dtype/weak_type) that forced any new trace; plus the zero-trace
+    regression tests in tests/test_chunked_prefill.py etc.
+  - **CoW before write / guarded pool writes** — every jaxpr-level KV
+    write is addressed through the block-table gather with the
+    trash-page route (``analysis.aliasing.lint_engine_aliasing``), the
+    refcount ledger always matches holders + cache
+    (``analysis.aliasing.check_pool_consistency``), and under
+    ``REPRO_SANITIZE=1`` every in-place page write asserts ``ref == 1``
+    at runtime (``analysis.sanitize``).
+  - **termination** — youngest-victim preemption, the solo-fit admission
+    assert (on ``usable_pages``/``num_available``, enforced by the AST
+    lint's capacity-asserts rule), and the reclaim fallback:
+    tests/test_scheduler.py's OutOfPages-under-load drains.
+  - **token identity** — flat/chunked/monolithic/spec/prefix-cache
+    outputs are bitwise the baseline's: the A/B drains in
+    tests/test_flat_step.py, tests/test_speculative.py,
+    tests/test_prefix_cache.py and the bench smoke.
+  - **allocator hygiene** — ``._free``/``._ref`` are mutated only in
+    kv_cache.py and no unseeded randomness enters serving code: the AST
+    lint (``analysis.ast_lint``, ``scripts/lint_invariants.py``).
 """
 
 from __future__ import annotations
@@ -308,7 +346,7 @@ class Scheduler:
             req.admit_seq = self._admit_counter
             self._admit_counter += 1
             if req.pages is None:        # a paused request keeps its pages
-                req.pages = SequencePages(self.pool)
+                req.pages = SequencePages(self.pool, owner=req.rid)
                 if self.prefix_cache is not None:
                     self._acquire_prefix(req)
                     if was_preempted:

@@ -30,8 +30,9 @@ import numpy as np
 import pytest
 
 from repro.configs import RunConfig, ShapeSpec, get_config, reduced_config
-from repro.kernels.ragged_attn import ragged_attention_reference
 from repro.kernels.ragged_attn.kernel import ragged_attention_kernel_call
+from repro.kernels.ragged_attn.ref import \
+    ragged_attention_ref as ragged_attention_reference
 from repro.models.model import build_model
 from repro.serving.engine import Engine
 from repro.serving.scheduler import Request, finish_reason_for
