@@ -19,15 +19,21 @@ the engine's own deterministic picks).  With ``--prefix-cache``, every
 request shares one system prompt and the layout-keyed prefix cache serves
 the shared pages byte-for-byte: later arrivals prefill only their own
 suffix, preemptions release pages into the cache instead of recomputing,
-and — once more — not a single token changes.  ``Engine.stats()`` counters
-(step wall time, slot occupancy, prefill stalls, chunks per prompt,
-acceptance rate, draft overhead, hit rate, CoW copies, compile counts) are
-printed at the end.
+and — once more — not a single token changes.  With ``--queue-limit``,
+admission control bounds the wait queue: arrivals past the limit are shed
+as typed ``rejected`` rows instead of waiting forever.  With
+``--deadline``, each request carries an SLO measured on the trace clock;
+requests that overrun finish as ``timeout`` with their pages released.
+``Engine.stats()`` counters (step wall time, slot occupancy, prefill
+stalls, chunks per prompt, acceptance rate, draft overhead, hit rate, CoW
+copies, compile counts, plus the resilience block — sheds, timeouts,
+cancels, quarantines, watchdog trips) are printed at the end.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py --arch smollm2-135m
 Fused:                     ... serve_decode.py --chunk-tokens 16
 Speculative:               ... serve_decode.py --spec-tokens 3
 Prompt caching:            ... serve_decode.py --prefix-cache
+Overload:                  ... serve_decode.py --queue-limit 2 --deadline 8
 """
 
 import argparse
@@ -68,6 +74,14 @@ def main():
                     "the cache — outputs are unchanged, prefill work drops")
     ap.add_argument("--sys-tokens", type=int, default=32,
                     help="shared system-prompt length for --prefix-cache")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bound the wait queue: arrivals past this depth "
+                    "are shed as typed 'rejected' rows (admission control) "
+                    "instead of queueing without bound")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request SLO on the trace clock (1 tick per "
+                    "step): requests still unfinished this long after "
+                    "arrival finish as 'timeout' with their pages released")
     ap.add_argument("--sample", action="store_true")
     args = ap.parse_args()
 
@@ -82,7 +96,8 @@ def main():
                     num_pages=args.pool_pages,
                     chunk_tokens=args.chunk_tokens,
                     spec_tokens=args.spec_tokens,
-                    prefix_cache=args.prefix_cache)
+                    prefix_cache=args.prefix_cache,
+                    queue_limit=args.queue_limit)
     rng = np.random.default_rng(1)
     key = jax.random.PRNGKey(1)
 
@@ -116,11 +131,18 @@ def main():
         trace.append((2.0 * i, np.concatenate([sysp, prompt]),
                       int(rng.integers(2, args.new_tokens + 1))))
 
+    # feed each request in as its arrival tick passes (rather than
+    # enqueueing the whole trace up-front) so --queue-limit sheds against
+    # the queue the server actually has at that moment; every add happens
+    # in an iteration that also steps, so shed rows are always collected
     t0 = time.perf_counter()
-    for arrival, prompt, max_new in trace:
-        engine.add_request(prompt, max_new, arrival=arrival)
+    pending = list(trace)
     clock, finished = 0.0, []
-    while engine.scheduler.has_work:
+    while pending or engine.scheduler.has_work:
+        while pending and pending[0][0] <= clock:
+            arrival, prompt, max_new = pending.pop(0)
+            engine.add_request(prompt, max_new, arrival=arrival,
+                               deadline_s=args.deadline)
         finished += engine.step(now=clock, greedy=not args.sample)
         clock += 1.0
     dt = time.perf_counter() - t0
@@ -155,6 +177,14 @@ def main():
               f"{pc['entries']} cached pages "
               f"({pc['shared_pages']} currently shared), "
               f"{pc['cow_copies']} CoW copies, {pc['evictions']} evictions")
+    res = es["resilience"]
+    print(f"[serve] resilience: {res['sheds']} shed "
+          f"(queue_limit={res['queue_limit']}), {res['timeouts']} timeouts "
+          f"(deadline={args.deadline}), {res['cancels']} cancels, "
+          f"{res['quarantines']} quarantined, "
+          f"{res['drafter_errors']} drafter errors "
+          f"({res['spec_auto_disables']} spec auto-disables), "
+          f"{res['watchdog_trips']} watchdog trips")
     if "speculative" in es:
         sp = es["speculative"]
         print(f"[serve] speculation: accepted {sp['accepted']}/{sp['drafted']} "
@@ -166,7 +196,8 @@ def main():
               f"({sp['drafter']})")
     for r in sorted(finished, key=lambda r: r.rid):
         print(f"  rid={r.rid} arrive@{r.arrival:>4.0f} prompt={r.prompt_len:>3} "
-              f"-> {len(r.out_tokens):>2} tokens: {r.out_tokens[:10]}")
+              f"-> {len(r.out_tokens):>2} tokens ({r.finish_reason}): "
+              f"{r.out_tokens[:10]}")
 
 
 if __name__ == "__main__":

@@ -19,15 +19,23 @@
 #   aliasing pass, recompile-hazard detector, AST invariant lint — plus
 #   a sanitized drain over every engine configuration via
 #   scripts/analyze.py; any finding fails the run)
+# With the seeded fault-plan smoke:  ./scripts/tier1.sh --chaos
+#   (runs scripts/chaos_smoke.py — drains a deterministic request mix
+#   clean and under seeded FaultPlans (OutOfPages spike, drafter failure
+#   burst, NaN-logit injection, page-copier failure) per engine config;
+#   any surviving request diverging from the clean run, an unbalanced
+#   allocator, or a post-warmup XLA trace fails the run)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 BENCH_SMOKE=0
 ANALYZE=0
+CHAOS=0
 ARGS=()
 for a in "$@"; do
   if [[ "$a" == "--bench-smoke" ]]; then BENCH_SMOKE=1;
   elif [[ "$a" == "--analyze" ]]; then ANALYZE=1;
+  elif [[ "$a" == "--chaos" ]]; then CHAOS=1;
   else ARGS+=("$a"); fi
 done
 
@@ -42,4 +50,9 @@ fi
 if [[ "$ANALYZE" == 1 ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python scripts/analyze.py
+fi
+
+if [[ "$CHAOS" == 1 ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python scripts/chaos_smoke.py
 fi

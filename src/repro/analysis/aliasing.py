@@ -173,10 +173,21 @@ def lint_engine_aliasing(engine, label: str = "engine") -> List[Finding]:
 
 def check_pool_consistency(engine, label: str = "engine") -> List[Finding]:
     """Dynamic half of the aliasing contract: audit the pool ledger
-    against its holders (live sequences + prefix-cache nodes)."""
+    against its holders (live sequences + prefix-cache nodes), and the
+    resilience contract's zero-leak-on-cancel: a retired rid — finished,
+    cancelled, timed out, shed or quarantined — may not hold pages."""
     f: List[Finding] = []
     pool = engine.pool
     here = f"{label} pool"
+
+    retired = getattr(engine, "_retired_rids", set())
+    for seq in pool.sequences():
+        if seq.owner in retired and seq.pages:
+            f.append(Finding(
+                _PASS, "retired-holds-pages", here,
+                f"retired rid {seq.owner} still holds pages {seq.pages} — "
+                f"zero-leak-on-cancel violated (every retirement path must "
+                f"release the block table)"))
     ledger = pool.ledger()
     refs, free = ledger["refs"], ledger["free"]
 

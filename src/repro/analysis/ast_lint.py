@@ -192,6 +192,25 @@ class _FileLinter(ast.NodeVisitor):
                               f"assert fires exactly when the cache works")
         self.generic_visit(node)
 
+    def visit_If(self, node: ast.If) -> None:
+        # the typed-exception conversion (PR 8) turned failure-path
+        # asserts into `if <cond>: raise PoolError/AdmissionError/...` —
+        # the capacity rule must follow them there, or the conversion
+        # would be a lint escape hatch
+        if self.serving_file and any(
+                isinstance(b, ast.Raise) for b in node.body):
+            for sub in ast.walk(node.test):
+                if (isinstance(sub, ast.Attribute)
+                        and sub.attr in _RAW_CAPACITY):
+                    self._add("capacity-asserts", node,
+                              f"raise-guard reasons about raw "
+                              f"'.{sub.attr}' — use usable_pages/"
+                              f"num_available: the free list legitimately "
+                              f"shrinks while the prefix cache holds "
+                              f"reclaimable pages, so this guard rejects "
+                              f"exactly when the cache works")
+        self.generic_visit(node)
+
 
 def lint_file(path: Path, *, serving_root: Optional[Path] = None
               ) -> List[Finding]:

@@ -52,9 +52,11 @@ def build_model(arch: str = "smollm2-135m", *, layers: int = 2,
 
 
 def _traffic(engine, *, seed: int = 0) -> None:
-    """A small deterministic drain exercising admission, chunking, growth
-    and (pool permitting) preemption — mixed prompt lengths, shared prefix
-    for the cache configs."""
+    """A small deterministic drain exercising admission, chunking, growth,
+    (pool permitting) preemption and mid-drain cancellation — mixed prompt
+    lengths, shared prefix for the cache configs.  The cancel retires one
+    request while another is mid-flight, so the sanitizer's retired-rid
+    and zero-leak checks run against real traffic, not just unit tests."""
     rng = np.random.Generator(np.random.Philox(seed))
     shared = rng.integers(1, 50, size=12).astype(np.int32)
     prompts = [
@@ -64,8 +66,9 @@ def _traffic(engine, *, seed: int = 0) -> None:
         rng.integers(1, 50, size=3).astype(np.int32),
     ]
     budgets = [6, 5, 7, 4]
-    for p, n in zip(prompts, budgets):
-        engine.add_request(p, n)
+    rids = [engine.add_request(p, n) for p, n in zip(prompts, budgets)]
+    engine.step(greedy=True, seed=seed)
+    engine.cancel(rids[2])          # mid-drain: others must be unaffected
     engine.drain(greedy=True, seed=seed)
 
 

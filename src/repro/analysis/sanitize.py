@@ -13,7 +13,13 @@ speed, before the device call runs:
   covering the write window: tokens silently dropped);
 * the step width is a member of the declared shape ladder and
   ``m_r``-aligned (tile-whole writes) — the runtime twin of the shape
-  linter, catching widths produced by state mutated after construction.
+  linter, catching widths produced by state mutated after construction;
+* the resilience contract (PR 8): a retired rid — finished, cancelled,
+  timed out, shed or quarantined — is never still scheduled and never
+  still holds pages (zero-leak-on-cancel), and a quarantined request's
+  privately-held pages are actually free after
+  ``cancel(cache_pages=False)`` — quarantined KV can never have reached
+  the prefix cache.
 
 Destinations are recomputed host-side through the same addressing rules
 the device scatters use (for the flat step, literally
@@ -55,6 +61,7 @@ class StepSanitizer:
         self.m_r = engine._bucket
         self.checks = 0            # steps inspected
         self.pages_checked = 0     # (page, step) write destinations audited
+        self.cancels_checked = 0   # quarantine/cancel page audits
         self.paged_widths: Optional[Set[int]] = self._declared_paged_widths()
         self.flat_widths: Optional[Set[int]] = (
             set(engine._flat_shapes()) if engine.flat else None)
@@ -119,6 +126,27 @@ class StepSanitizer:
                     f"are read-only; PagedKVPool.cow() must split the page "
                     f"before any write or every holder's KV is corrupted")
 
+    def check_retired(self) -> None:
+        """Zero-leak-on-cancel: a retired rid (finished, cancelled, timed
+        out, shed, quarantined) must be gone from the schedule and must
+        hold no pages.  Runs before every step, so a leak is caught at
+        the step after the retirement that caused it."""
+        retired = getattr(self.engine, "_retired_rids", None)
+        if not retired:
+            return
+        sched = self.engine.scheduler
+        for r in list(sched.running.values()) + list(sched.waiting):
+            if r.rid in retired:
+                self._fail(f"retired rid {r.rid} is still scheduled "
+                           f"(status={r.status}) — cancel/finish must "
+                           f"remove the request from the scheduler")
+        for s in self.pool.sequences():
+            if s.owner in retired and s.pages:
+                self._fail(
+                    f"retired rid {s.owner} still holds pages {s.pages} — "
+                    f"zero-leak-on-cancel violated (release() must run on "
+                    f"every retirement path)")
+
     # ------------------------------------------------------------------
     def check_paged(self, token, block_tables, lens, new_counts) -> None:
         token = np.asarray(token)
@@ -171,6 +199,7 @@ def install(engine) -> StepSanitizer:
     orig_paged = engine._paged_step
 
     def paged_checked(params, caches, token, bt, lens, counts, idx=None):
+        san.check_retired()
         san.check_paged(token, bt, lens, counts)
         return orig_paged(params, caches, token, bt, lens, counts, idx)
 
@@ -179,9 +208,40 @@ def install(engine) -> StepSanitizer:
         orig_flat = engine._flat_step
 
         def flat_checked(params, caches, token, bt, row_ids, q_pos, idx):
+            san.check_retired()
             san.check_flat(token, bt, row_ids, q_pos)
             return orig_flat(params, caches, token, bt, row_ids, q_pos, idx)
 
         engine._flat_step = flat_checked
+
+    # quarantine audit: a cancel(cache_pages=False) is the engine saying
+    # "this KV is poisoned" — pages the request held privately must end
+    # the call free (a nonzero ref would mean the poisoned KV slipped
+    # into the prefix cache or another block table)
+    orig_cancel = engine.scheduler.cancel
+
+    def cancel_checked(rid, reason="cancelled", *, cache_pages=True):
+        solo = []
+        if not cache_pages:
+            live = ([r for r in engine.scheduler.waiting if r.rid == rid] +
+                    [r for r in engine.scheduler.running.values()
+                     if r.rid == rid])
+            if live and live[0].pages is not None:
+                solo = [p for p in live[0].pages.pages
+                        if engine.pool.ref(p) == 1]
+        out = orig_cancel(rid, reason, cache_pages=cache_pages)
+        if solo:
+            san.cancels_checked += 1
+            for p in solo:
+                if engine.pool.ref(p) != 0:
+                    san._fail(
+                        f"quarantined page {p} of rid {rid} survived "
+                        f"cancel(cache_pages=False) with "
+                        f"ref={engine.pool.ref(p)} (holders: "
+                        f"{engine.pool.holders(p)}) — quarantined KV must "
+                        f"never reach the prefix cache")
+        return out
+
+    engine.scheduler.cancel = cancel_checked
     engine.sanitizer = san
     return san

@@ -107,11 +107,13 @@ from repro.core.layout import ceil_div, round_up
 from repro.core.linear import prepack_params
 from repro.distributed import sharding
 from repro.models.model import ReproModel
-from repro.serving.kv_cache import (PagedKVPool, copy_pages,
+from repro.serving.faults import StallError
+from repro.serving.kv_cache import (PagedKVPool, PoolError, copy_pages,
                                     fresh_slot_states, merge_slot,
                                     prefill_view)
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.scheduler import Request, Scheduler, finish_reason_for
+from repro.serving.scheduler import (AdmissionError, Request, Scheduler,
+                                     finish_reason_for)
 from repro.serving.speculative import Drafter, NgramDrafter, accept_tokens
 
 __all__ = ["Engine"]
@@ -129,7 +131,11 @@ class Engine:
                  token_budget: Optional[int] = None,
                  spec_tokens: Optional[int] = None,
                  drafter: Optional[Drafter] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 queue_limit: Optional[int] = None,
+                 queue_pages: Optional[int] = None,
+                 watchdog_steps: int = 64,
+                 nan_guard: bool = True):
         self.model = model
         self.mesh = mesh
         self.params = (prepack_params(params, model.ctx)
@@ -231,7 +237,26 @@ class Engine:
                                    watermark_pages=watermark_pages,
                                    chunk_tokens=chunk_tokens,
                                    chunk_align=layout.m_r,
-                                   prefix_cache=self.prefix_cache)
+                                   prefix_cache=self.prefix_cache,
+                                   queue_limit=queue_limit,
+                                   queue_pages=queue_pages)
+        # resilience ladder (overload + fault handling; faults.py injects,
+        # this engine degrades): shed/cancelled requests leave through an
+        # out-of-band finished buffer, a stuck drain trips the watchdog,
+        # non-finite logits quarantine their row, and a failing drafter is
+        # auto-disabled for the rest of the drain
+        self.watchdog_steps = watchdog_steps
+        self.nan_guard = nan_guard
+        self._finished_oob: List[Request] = []
+        self._retired_rids: set = set()    # every finished rid (analysis:
+                                           # no retired rid may hold pages)
+        self._no_progress_steps = 0
+        self._watchdog_trips = 0
+        self._drafter_errors = 0
+        self._drafter_fail_streak = 0
+        self._drafter_fail_limit = 3
+        self._spec_disabled = False
+        self._spec_auto_disables = 0
         # speculative decode (spec_tokens=k): every decode row may carry
         # 1 + k positions through the same fused ragged step
         self.spec_tokens = spec_tokens
@@ -305,23 +330,55 @@ class Engine:
     # ------------------------------------------------------------------
     def add_request(self, tokens, max_new: int, *, eos_id: Optional[int] = None,
                     arrival: float = 0.0, temperature: float = 1.0,
-                    seed: Optional[int] = None) -> int:
+                    seed: Optional[int] = None,
+                    deadline_s: Optional[float] = None,
+                    max_queue_s: Optional[float] = None) -> int:
         """Queue one request.  Returns its request id.
 
         ``temperature``/``seed`` are per-request sampling params (one batch
         mixes them freely): ``temperature=0`` forces greedy for this
         request even in a sampled drain; ``seed=None`` inherits the step's
         seed.  Per-request keys are what make sampled decode reproducible
-        under preemption and speculation alike."""
+        under preemption and speculation alike.
+
+        ``deadline_s``/``max_queue_s`` bound the request's wall-clock
+        lifetime / queue wait relative to ``arrival``, enforced whenever
+        ``step(now=...)`` carries a clock.  Under admission control
+        (``queue_limit``/``queue_pages``) an over-capacity add is shed:
+        the request finishes immediately with ``finish_reason="rejected"``
+        (delivered by the next ``step``/``drain``) instead of queueing
+        unboundedly — only an *impossible* request (its lifetime can never
+        fit the pool) still raises :class:`AdmissionError`."""
         assert self.continuous, \
             f"{self.model.cfg.family} serves via generate_static"
         rid = self._next_rid
         self._next_rid += 1
         prompt = np.asarray(tokens, np.int32).reshape(-1)
-        self.scheduler.add(Request(rid=rid, prompt=prompt, max_new=max_new,
-                                   eos_id=eos_id, arrival=arrival,
-                                   temperature=temperature, seed=seed))
+        req = Request(rid=rid, prompt=prompt, max_new=max_new,
+                      eos_id=eos_id, arrival=arrival,
+                      temperature=temperature, seed=seed,
+                      deadline_s=deadline_s, max_queue_s=max_queue_s)
+        try:
+            self.scheduler.add(req)
+        except AdmissionError as e:
+            if e.kind == "impossible":
+                raise              # a config error, not an overload signal
+            req.status = "finished"
+            req.finish_reason = "rejected"
+            self._finished_oob.append(req)
         return rid
+
+    def cancel(self, rid: int, reason: str = "cancelled") -> bool:
+        """Cancel a live request from any lifecycle state (queued,
+        prefilling, paused, decoding, mid-spec-rollback).  Its pages are
+        released (into the prefix cache when one is attached) and it is
+        delivered by the next ``step``/``drain`` with
+        ``finish_reason=reason``.  Returns False if ``rid`` is not live."""
+        req = self.scheduler.cancel(rid, reason)
+        if req is None:
+            return False
+        self._finished_oob.append(req)
+        return True
 
     @property
     def num_preemptions(self) -> int:
@@ -354,6 +411,19 @@ class Engine:
             "compiles": dict(self.model.trace_counts),
             "scheduler": self.scheduler.stats(),
             "pool": self.pool.stats(),
+        }
+        out["resilience"] = {
+            "queue_depth": len(self.scheduler.waiting),
+            "queue_limit": self.scheduler.queue_limit,
+            "queue_pages": self.scheduler.queue_pages,
+            "sheds": self.scheduler.num_rejected,
+            "timeouts": self.scheduler.num_timeouts,
+            "cancels": self.scheduler.num_cancels,
+            "quarantines": self.scheduler.num_quarantines,
+            "drafter_errors": self._drafter_errors,
+            "spec_auto_disables": self._spec_auto_disables,
+            "spec_disabled": self._spec_disabled,
+            "watchdog_trips": self._watchdog_trips,
         }
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()
@@ -397,25 +467,74 @@ class Engine:
         per-admission prefill plus a ``[slots, 1]`` decode; chunked policy:
         a single fused ragged ``[slots, chunk_tokens]`` step in which every
         active row carries 1 (decoding) to ``chunk_tokens`` (prefilling)
-        new positions.  Returns requests finished during this step."""
+        new positions.  Returns requests finished during this step —
+        including requests shed at admission, cancelled via
+        :meth:`cancel`, and (when ``now`` carries a clock) requests whose
+        ``deadline_s``/``max_queue_s`` elapsed, with finish reasons
+        ``rejected``/``cancelled``/``timeout``/``error``."""
         t0 = time.perf_counter()
+        finished = list(self._finished_oob)      # shed/cancelled since
+        self._finished_oob.clear()               # the previous step
+        if now is not None:
+            finished.extend(self.scheduler.expire(now))
         if self.flat:
-            finished = self._step_flat(now, greedy, seed)
+            finished.extend(self._step_flat(now, greedy, seed))
         elif self.chunked:
-            finished = self._step_chunked(now, greedy, seed)
+            finished.extend(self._step_chunked(now, greedy, seed))
         else:
-            finished = self._step_monolithic(now, greedy, seed)
+            finished.extend(self._step_monolithic(now, greedy, seed))
         # idle ticks (an online replay polling before the next arrival) do
         # no work and must not dilute the per-step stats
         if self.scheduler.running or finished:
             self._steps += 1
             self._step_time += time.perf_counter() - t0
+            self._no_progress_steps = 0
+        else:
+            self._watchdog(now)
         for req in finished:
             self._finished_count += 1
             self._chunk_steps_total += req.chunk_steps
+            self._retired_rids.add(req.rid)
             if self.drafter is not None:
                 self.drafter.forget(req.rid)
         return finished
+
+    def _watchdog(self, now) -> None:
+        """A step that admitted, advanced and finished nothing while
+        already-arrived work sat waiting is a stall symptom.  One is
+        legal (a displacement can empty the running set for a step);
+        after ``watchdog_steps`` consecutive ones the drain is provably
+        stuck — the termination proof guarantees the waiting head is
+        eventually admitted, so a persistent no-progress streak means
+        that guarantee was broken (e.g. a fault left the pool
+        unsatisfiable) — and the watchdog turns the silent spin into a
+        diagnosable :class:`StallError` naming the non-advancing rids."""
+        stuck = [r for r in self.scheduler.waiting
+                 if now is None or r.arrival <= now]
+        if not stuck:
+            self._no_progress_steps = 0          # idle poll before arrivals
+            return
+        self._no_progress_steps += 1
+        if self._no_progress_steps >= self.watchdog_steps:
+            self._watchdog_trips += 1
+            self._no_progress_steps = 0
+            raise StallError(
+                f"no request advanced for {self.watchdog_steps} "
+                f"consecutive steps; waiting: " +
+                ", ".join(f"rid {r.rid} ({r.status}, cursor "
+                          f"{r.prefill_cursor}/{r.prompt_len})"
+                          for r in stuck) +
+                f"; pool: {self.pool.num_available} of "
+                f"{self.pool.usable_pages} pages available")
+
+    def _quarantine(self, req: Request, finished: List[Request]) -> None:
+        """Degradation ladder, bottom rung: a poisoned row (non-finite
+        logits, failed rollback) is retired alone — pages freed, nothing
+        inserted into the prefix cache — instead of poisoning the batch
+        or the cache.  Survivors are unaffected: rows are independent
+        and picks are (seed, rid, position)-keyed."""
+        self.scheduler.cancel(req.rid, "error", cache_pages=False)
+        finished.append(req)
 
     def _step_monolithic(self, now, greedy: bool, seed: int) -> List[Request]:
         finished = []
@@ -428,7 +547,9 @@ class Engine:
             if not admitted:
                 break
             req = admitted[0]
-            self._prefill_request(req, greedy, seed)
+            if not self._prefill_request(req, greedy, seed):
+                finished.append(req)             # quarantined at prefill
+                continue
             if req.done():
                 self.scheduler.finish(req)
                 finished.append(req)
@@ -517,7 +638,13 @@ class Engine:
                 if spec:
                     idx[slot] = n - 1     # its last chunk token, read at j=0
         total_new = int(counts.sum())
-        assert total_new > 0, "running slots but nothing to advance"
+        if total_new == 0:
+            self._watchdog_trips += 1
+            raise StallError(
+                "fused step scheduled zero tokens with live slots: " +
+                ", ".join(f"rid {r.rid} ({r.status}, cursor "
+                          f"{r.prefill_cursor}/{r.prompt_len}, len {r.len})"
+                          for r in running.values()))
         # decodes (and their drafts) are unconditional; only prefill tokens
         # are budget-capped
         assert total_new <= max(self.token_budget, ndecode)
@@ -531,6 +658,11 @@ class Engine:
             else:
                 n = plan.get(slot, 0)
                 if n == 0:
+                    continue
+                if self.nan_guard and not np.isfinite(rows[slot]).all():
+                    # before the cursor advance and the cache insert:
+                    # a poisoned chunk's pages must never be shared
+                    self._quarantine(req, finished)
                     continue
                 req.prefill_cursor += n
                 req.len = req.prefill_cursor
@@ -580,7 +712,13 @@ class Engine:
         decode_counts = {s: n for s, n in neff.items() if n > 0}
         segs = sched.plan_segments(decode_counts, self.token_budget)
         total = sum(n for _, _, n in segs)
-        assert total > 0, "running slots but nothing to advance"
+        if total == 0:
+            self._watchdog_trips += 1
+            raise StallError(
+                "flat step scheduled zero tokens with live slots: " +
+                ", ".join(f"rid {r.rid} ({r.status}, cursor "
+                          f"{r.prefill_cursor}/{r.prompt_len}, len {r.len})"
+                          for r in running.values()))
         ndecode = sum(decode_counts.values())
         # decodes (and their drafts) are unconditional; only prefill
         # tokens are budget-capped — token-exact, not shape-limited
@@ -629,6 +767,9 @@ class Engine:
             if kind == "decode":
                 self._verify_decode_row(req, drafts.get(slot, []),
                                         rows[slot], n, greedy, seed, finished)
+                continue
+            if self.nan_guard and not np.isfinite(rows[slot]).all():
+                self._quarantine(req, finished)  # before the cache insert
                 continue
             req.prefill_cursor += n
             req.len = req.prefill_cursor
@@ -690,8 +831,14 @@ class Engine:
         """``{slot: [draft tokens]}`` for decoding rows, trimmed so a draft
         can never outlive ``max_new`` (the final generated token is never
         fed back, so at most ``max_new - generated - 1`` fed positions
-        remain useful).  Host wall time is accounted as draft overhead."""
-        if self.drafter is None:
+        remain useful).  Host wall time is accounted as draft overhead.
+
+        Degradation ladder: a drafter exception costs only that step's
+        drafts (rows decode one token, same acceptance path, identical
+        tokens); ``_drafter_fail_limit`` *consecutive* failures
+        auto-disable speculation for the rest of the drain — a broken
+        drafter degrades throughput, never correctness or liveness."""
+        if self.drafter is None or self._spec_disabled:
             return {}
         t0 = time.perf_counter()
         jobs, slot_of = [], {}
@@ -709,7 +856,17 @@ class Engine:
             # drafter runs one [slots, 1] step per draft position instead
             # of k sequential [1, 1] steps per row (Drafter.propose_all;
             # the base class degenerates to the per-row loop)
-            proposals = self.drafter.propose_all(jobs)
+            try:
+                proposals = self.drafter.propose_all(jobs)
+            except Exception:
+                self._drafter_errors += 1
+                self._drafter_fail_streak += 1
+                if self._drafter_fail_streak >= self._drafter_fail_limit:
+                    self._spec_disabled = True
+                    self._spec_auto_disables += 1
+                proposals = {}
+            else:
+                self._drafter_fail_streak = 0
             for req, k in jobs:
                 d = [int(t) for t in proposals.get(req.rid, [])][:k]
                 if d:
@@ -782,7 +939,15 @@ class Engine:
         """Accept the row's draft prefix (token-identical rule — see
         :mod:`repro.serving.speculative`), advance the cache length by the
         tokens whose KV is now live, truncate the block table past them
-        (rejected-KV rollback), and retire the request if it completed."""
+        (rejected-KV rollback), and retire the request if it completed.
+        A non-finite logits row is quarantined *before* any token is
+        committed; a rollback whose CoW split fails is quarantined after
+        (its block table no longer matches its committed length, so the
+        next step could read rejected KV) — either way pages are freed
+        and nothing reaches the prefix cache."""
+        if self.nan_guard and not np.isfinite(rows_slot).all():
+            self._quarantine(req, finished)
+            return
         appended, accepted = accept_tokens(
             req, drafts, rows_slot, n,
             lambda row, rq: self._pick(row, rq, greedy, seed))
@@ -792,7 +957,11 @@ class Engine:
         if n > 1:
             self._drafted += n - 1
             self._accepted += accepted
-            self._rollback_pages += req.pages.truncate(req.len)
+            try:
+                self._rollback_pages += req.pages.truncate(req.len)
+            except PoolError:
+                self._quarantine(req, finished)
+                return
             # mid-draft eos (or any early stop): the block table must end
             # exactly at the last committed token — a page past it could
             # carry rejected/post-eos draft KV into a later prefix-cache
@@ -805,11 +974,17 @@ class Engine:
             self.scheduler.finish(req)
             finished.append(req)
 
-    def drain(self, *, greedy: bool = True, seed: int = 0) -> List[Request]:
-        """Run steps until every queued request has finished."""
+    def drain(self, *, greedy: bool = True, seed: int = 0,
+              now: Optional[float] = None) -> List[Request]:
+        """Run steps until every queued request has finished (including
+        shed/cancelled/expired ones, delivered with their finish
+        reasons).  The speculative auto-disable ladder is per-drain: a
+        fresh drain gets its drafter back."""
         finished = []
-        while self.scheduler.has_work:
-            finished.extend(self.step(greedy=greedy, seed=seed))
+        while self.scheduler.has_work or self._finished_oob:
+            finished.extend(self.step(now=now, greedy=greedy, seed=seed))
+        self._spec_disabled = False
+        self._drafter_fail_streak = 0
         return finished
 
     def _prefill_bucket(self, l: int) -> int:
@@ -937,14 +1112,16 @@ class Engine:
                 btb, zb, zb, idxz)
             self.drafter.warmup()
 
-    def _prefill_request(self, req: Request, greedy: bool, seed: int) -> None:
+    def _prefill_request(self, req: Request, greedy: bool, seed: int) -> bool:
         """Prefill one admitted request at its own length (rounded up to a
         geometric packed-tile bucket so prompt-length compilations stay
         bounded and amortize across requests; padded rows are masked into
         the trash page).  With a prefix cache, admission already parked the
         cursor at the hit, so only the uncached suffix is computed — the
         shared prefix pages enter the step read-only through the block
-        table, exactly like a decode row's past (lens = cursor)."""
+        table, exactly like a decode row's past (lens = cursor).  Returns
+        False when the row was quarantined for non-finite logits (before
+        its KV is merged or its pages reach the prefix cache)."""
         l = req.prompt_len
         start = req.prefill_cursor
         n = l - start
@@ -957,6 +1134,10 @@ class Engine:
             self.params, view, jnp.asarray(token), jnp.asarray(bt),
             jnp.full((1,), start, jnp.int32), jnp.full((1,), n, jnp.int32),
             None)
+        row = np.asarray(logits[0, 0, :])
+        if self.nan_guard and not np.isfinite(row).all():
+            self.scheduler.cancel(req.rid, "error", cache_pages=False)
+            return False
         self.caches = merge_slot(self.caches, updated, req.slot)
         req.len = l
         req.prefill_cursor = l
@@ -964,8 +1145,8 @@ class Engine:
         self._prefill_tokens += n
         if self.prefix_cache is not None:
             self.prefix_cache.insert(req.prompt, req.pages.pages, l)
-        req.out_tokens.append(
-            self._pick(np.asarray(logits[0, 0, :]), req, greedy, seed))
+        req.out_tokens.append(self._pick(row, req, greedy, seed))
+        return True
 
     def _pick(self, logits_row: np.ndarray, req: Request, greedy: bool,
               seed: int) -> int:
@@ -987,19 +1168,29 @@ class Engine:
     # ------------------------------------------------------------------
     def generate(self, batch: dict, max_new: int, *, greedy: bool = True,
                  seed: int = 0, eos_id: Optional[int] = None,
-                 return_reasons: bool = False):
+                 return_reasons: bool = False,
+                 deadline_s: Optional[float] = None):
         """batch: {"tokens": [B, L] prompt, (+frames/patches)}.
 
-        Returns [B, max_new] generated tokens; rows that hit ``eos_id``
-        before ``max_new`` are padded to the full width with ``eos_id``
-        (rows never produce ragged lengths, so the result always stacks).
-        With ``return_reasons=True`` also returns a length-B list of finish
-        reasons ("eos" | "length").  Compatibility wrapper: for decoder-only
-        families each row becomes a request served by the continuous engine
-        (results are identical to serving it alone); encdec/vlm use the
-        static path, where eos rows are truncated-and-padded post hoc.
+        Returns [B, max_new] generated tokens; rows that finish early —
+        ``eos_id`` hit, but also ``timeout``/``rejected``/``error`` under
+        deadlines, admission control or quarantine — are padded to the
+        full width exactly like eos rows (with ``eos_id``, or 0 when no
+        eos is set), so rows never produce ragged lengths and the result
+        always stacks.  With ``return_reasons=True`` also returns a
+        length-B list of finish reasons ("eos" | "length" | "timeout" |
+        "rejected" | "error").  ``deadline_s`` bounds each row's
+        wall-clock lifetime (continuous engine only): the drain runs on a
+        real clock and overdue rows finish with ``"timeout"``.
+        Compatibility wrapper: for decoder-only families each row becomes
+        a request served by the continuous engine (results are identical
+        to serving it alone); encdec/vlm use the static path, where eos
+        rows are truncated-and-padded post hoc.
         """
         if not self.continuous:
+            assert deadline_s is None, \
+                "deadline_s needs the continuous engine (the static path " \
+                "decodes lock-step, with no per-request lifecycle)"
             # np.array: the static path hands back a buffer backed by a jax
             # array, which numpy imports read-only — copy before padding
             out = np.array(self.generate_static(batch, max_new, greedy=greedy,
@@ -1015,12 +1206,22 @@ class Engine:
                     if reasons[i] == "eos":
                         out[i, kept - 1:] = eos_id
             return (out, reasons) if return_reasons else out
-        assert not self.scheduler.has_work, \
+        assert not self.scheduler.has_work and not self._finished_oob, \
             "generate() needs an idle engine; use add_request/step instead"
         prompts = np.asarray(batch["tokens"])
-        rids = [self.add_request(prompts[i], max_new, eos_id=eos_id)
+        rids = [self.add_request(prompts[i], max_new, eos_id=eos_id,
+                                 deadline_s=deadline_s)
                 for i in range(prompts.shape[0])]
-        by_rid = {r.rid: r for r in self.drain(greedy=greedy, seed=seed)}
+        if deadline_s is None:
+            done = self.drain(greedy=greedy, seed=seed)
+        else:
+            done, t0 = [], time.perf_counter()
+            while self.scheduler.has_work or self._finished_oob:
+                done.extend(self.step(now=time.perf_counter() - t0,
+                                      greedy=greedy, seed=seed))
+            self._spec_disabled = False
+            self._drafter_fail_streak = 0
+        by_rid = {r.rid: r for r in done}
         pad = 0 if eos_id is None else eos_id
         rows, reasons = [], []
         for rid in rids:

@@ -69,12 +69,22 @@ import numpy as np
 
 from repro.core.layout import PackedLayout, ceil_div, round_up
 
-__all__ = ["OutOfPages", "PagedKVPool", "SequencePages", "copy_pages",
-           "fresh_slot_states", "prefill_view", "merge_slot",
+__all__ = ["PoolError", "OutOfPages", "PagedKVPool", "SequencePages",
+           "copy_pages", "fresh_slot_states", "prefill_view", "merge_slot",
            "map_slot_states"]
 
 
-class OutOfPages(RuntimeError):
+class PoolError(RuntimeError):
+    """An allocator contract violation (double-free, foreign free, sharing
+    a dead page) or allocation failure.  Raised explicitly — unlike the
+    ``assert`` statements it replaced, the check survives ``python -O``,
+    because a refcount bug in a production drain silently crossing two
+    requests' KV streams is exactly the failure mode optimized runs must
+    still catch.  The message carries the diagnostic payload (page id,
+    refcount, owner rids via :meth:`PagedKVPool.holders`)."""
+
+
+class OutOfPages(PoolError):
     """The pool cannot satisfy an allocation (admission must wait)."""
 
 
@@ -196,23 +206,26 @@ class PagedKVPool:
         holder sees the page read-only: shared pages are never written in
         place (:meth:`cow` first)."""
         for p in pages:
-            assert self._ref.get(p, 0) >= 1, \
-                f"page {p} shared while not allocated (ref=0, holders: " \
-                f"{self.holders(p) or 'none'}) — sharing a dead page would " \
-                f"resurrect freed KV"
+            if self._ref.get(p, 0) < 1:
+                raise PoolError(
+                    f"page {p} shared while not allocated (ref=0, holders: "
+                    f"{self.holders(p) or 'none'}) — sharing a dead page "
+                    f"would resurrect freed KV")
             self._ref[p] += 1
             self.total_shares += 1
 
     def free(self, pages: Iterable[int]) -> None:
         for p in pages:
-            assert 0 < p < self.num_pages, \
-                f"page {p} freed outside the pool's usable range " \
-                f"1..{self.num_pages - 1} (page 0 is the trash page)"
-            assert p in self._ref, \
-                f"page {p} freed twice (or never allocated): ref=" \
-                f"{self._ref.get(p, 0)}, still held by requests " \
-                f"{self.holders(p) or 'none'} — a double-free hands one " \
-                f"page to two requests and crosses their KV"
+            if not 0 < p < self.num_pages:
+                raise PoolError(
+                    f"page {p} freed outside the pool's usable range "
+                    f"1..{self.num_pages - 1} (page 0 is the trash page)")
+            if p not in self._ref:
+                raise PoolError(
+                    f"page {p} freed twice (or never allocated): ref="
+                    f"{self._ref.get(p, 0)}, still held by requests "
+                    f"{self.holders(p) or 'none'} — a double-free hands one "
+                    f"page to two requests and crosses their KV")
             self._ref[p] -= 1
             self.total_frees += 1
             if self._ref[p] == 0:
@@ -232,7 +245,18 @@ class PagedKVPool:
             return old
         new = self.alloc()
         if self.page_copier is not None:
-            self.page_copier(old, new)
+            try:
+                self.page_copier(old, new)
+            except Exception as e:
+                # a failed device copy must not leak the fresh page or
+                # leave a half-copied page in the block table; surface a
+                # typed error the caller can degrade on (prefix-cache
+                # fallback re-prefills, the engine quarantines)
+                self.free([new])
+                raise PoolError(
+                    f"page_copier failed copying page {old} -> {new} "
+                    f"(holders of {old}: {self.holders(old) or 'none'}): "
+                    f"{e}") from e
         seq.pages[idx] = new
         self.free([old])
         self.cow_copies += 1

@@ -48,7 +48,16 @@ preemption *releases pages into the cache instead of freeing them* —
 generated tokens fold into the prompt first, so the fold-extended prompt
 keys the written full pages and re-admission recomputes only the uncached
 suffix: at most the partial last page plus the one never-written pick.
-The PR-2 recompute-everything fold path becomes a cache hit.
+The PR-2 recompute-everything fold path becomes a cache hit.  The same
+release-into-cache path serves **cancellation**: a request cancelled or
+deadline-expired from any lifecycle state donates its full written pages
+(`Scheduler.cancel(..., cache_pages=True)`), so the work it did complete
+survives for later arrivals.  The one exception is **quarantine**: a row
+whose logits went NaN/Inf is retired with ``cache_pages=False`` — its KV
+is suspect by construction and must never enter the cache (the
+``REPRO_SANITIZE=1`` sanitizer's ``cancel_checked`` audit enforces
+exactly this: every sole-ref page of a quarantined request is freed, not
+cached).
 
 Host-side only: this module never touches device arrays (the engine owns
 the cache pytree and installs ``pool.page_copier`` for CoW).  Lookups and

@@ -115,6 +115,62 @@ never budget-stalled (they are planned before prefill chunks).
 ``eager=True`` restores the PR-1 policy (reserve the full lifetime at
 admission; growth never fails) — kept as the benchmark baseline.
 
+Request lifecycle state machine
+-------------------------------
+
+Every request moves through ``Request.status`` states along exactly these
+edges (terminal ``finish_reason`` in parentheses):
+
+  - ``(new) → waiting`` — ``add()`` passed the admission checks and
+    inserted the request into the bounded wait queue in arrival order.
+  - ``(new) → finished (rejected)`` — ``add()`` shed the request instead:
+    the queue is at ``queue_limit`` depth, or the queue's predicted page
+    demand (prompt pages of every queued-but-pageless request plus this
+    one) exceeds ``queue_pages``.  The shed is a typed
+    :class:`AdmissionError` raised *before* any state is taken — fast
+    rejection under overload instead of unbounded queueing; the engine
+    converts it into a ``finish_reason="rejected"`` row.  (A request whose
+    KV budget can never fit ``max_len`` or the pool even alone raises the
+    same typed error with ``kind="impossible"`` — a caller bug, not an
+    overload signal, so the engine re-raises it.)
+  - ``waiting → prefilling`` (chunked) or ``waiting → running``
+    (monolithic) — ``admit()``: a slot was free, pages were available, and
+    the arrival time has passed.
+  - ``prefilling → running`` — the prefill cursor reached the prompt
+    length and the first token was picked.
+  - ``prefilling → waiting`` (*paused*) — displaced mid-prefill: keeps
+    pages + cursor, surrenders only the slot.
+  - ``waiting (paused) → waiting`` (*reclaimed*) — last-resort page
+    recovery released the paused pages and reset the cursor.
+  - ``running → waiting`` (*preempted*) — youngest victim of pool
+    exhaustion: generated tokens folded into the prompt, pages released
+    (into the prefix cache when attached), recompute on re-admission.
+  - ``running → finished (eos | length)`` — ``done()``; the one
+    happy-path exit.
+  - ``waiting | prefilling | running → finished (timeout)`` —
+    ``expire(now)``: the request's ``deadline_s`` elapsed (any state), or
+    ``max_queue_s`` elapsed before it was ever admitted.
+  - ``waiting | prefilling | running → finished (cancelled | timeout |
+    error)`` — ``cancel(rid, reason)``: works from *any* live state,
+    including between a speculative rollback and the next step (out_tokens
+    only ever holds accepted tokens, so there is no mid-rollback state to
+    corrupt).  The slot (if any) is returned, pages are released — into
+    the prefix cache when the KV is valid (``cache_pages=True``), straight
+    to the free list when it is quarantined (``reason="error"``: a
+    NaN-logit row's pages must never be shared) — and the request never
+    re-enters any queue.
+
+Cancellation and the termination proof: cancel/expire only ever *remove*
+work (a cancelled request frees its slot and pages and never returns), so
+every quantity the termination argument counts — waiting requests, pages
+the oldest request still needs — is monotonically helped by a
+cancellation, and the proof above survives unchanged.  Admission
+rejections shrink the queue before it holds state, so they cannot strand
+pages either.  Zero-leak-on-cancel (a cancelled request leaves no live
+pages, a quarantined request's private pages never reach the cache) is
+checked dynamically by the ``REPRO_SANITIZE=1`` sanitizer and audited by
+``analysis.aliasing.check_pool_consistency``.
+
 Invariants & how they're checked
 --------------------------------
 
@@ -162,9 +218,30 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
-from repro.serving.kv_cache import OutOfPages, PagedKVPool, SequencePages
+from repro.serving.kv_cache import (OutOfPages, PagedKVPool, PoolError,
+                                    SequencePages)
 
-__all__ = ["Request", "Scheduler", "finish_reason_for"]
+__all__ = ["AdmissionError", "Request", "Scheduler", "finish_reason_for"]
+
+
+class AdmissionError(RuntimeError):
+    """``Scheduler.add`` refused a request.  ``kind`` says why:
+
+    - ``"queue-depth"`` / ``"page-demand"`` — overload shed: the bounded
+      wait queue is full, or its predicted page demand already exceeds the
+      configured cap.  Transient; the engine reports the request with
+      ``finish_reason="rejected"`` instead of queueing it unboundedly.
+    - ``"impossible"`` — the request's KV budget can never fit ``max_len``
+      or the pool even running alone: a caller bug, never admissible.
+
+    Raised explicitly (not an ``assert``) so the admission contract
+    survives ``python -O`` — an impossible request slipping into the queue
+    would deadlock the preemption loop's termination argument."""
+
+    def __init__(self, rid: int, kind: str, message: str):
+        super().__init__(message)
+        self.rid = rid
+        self.kind = kind
 
 
 def finish_reason_for(tokens, max_new: int, eos_id: Optional[int]):
@@ -199,6 +276,15 @@ class Request:
     # falls back to the engine step's seed.
     temperature: float = 1.0
     seed: Optional[int] = None
+    # per-request SLO bounds, both measured from ``arrival`` against the
+    # clock the engine is stepped with (``step(now=...)``; wall-clock when
+    # the engine drives its own drain): ``deadline_s`` bounds the whole
+    # lifetime in any state, ``max_queue_s`` bounds only the time spent
+    # waiting before the *first* admission.  ``None`` = unbounded.
+    # Expiry finishes the request as ``finish_reason="timeout"`` with
+    # whatever tokens it has (padded like an eos row in ``generate``).
+    deadline_s: Optional[float] = None
+    max_queue_s: Optional[float] = None
 
     # runtime state (owned by the scheduler/engine)
     status: str = "waiting"       # waiting | prefilling | running | finished
@@ -253,7 +339,8 @@ class Scheduler:
     def __init__(self, max_slots: int, pool: PagedKVPool, max_len: int, *,
                  eager: bool = False, watermark_pages: int = 1,
                  chunk_tokens: Optional[int] = None, chunk_align: int = 1,
-                 prefix_cache=None):
+                 prefix_cache=None, queue_limit: Optional[int] = None,
+                 queue_pages: Optional[int] = None):
         self.max_slots = max_slots
         self.pool = pool
         self.max_len = max_len
@@ -262,6 +349,10 @@ class Scheduler:
         self.chunk_tokens = chunk_tokens       # None = monolithic prefill
         self.chunk_align = max(1, chunk_align)  # layout m_r: chunks stay tiles
         self.prefix_cache = prefix_cache       # None = no sharing (PR-2/3/4)
+        # admission control: bound on queued requests / on the queue's
+        # predicted page demand; None = unbounded (the pre-PR-8 behavior)
+        self.queue_limit = queue_limit
+        self.queue_pages = queue_pages
         assert prefix_cache is None or not eager, \
             "prefix cache needs lazy allocation: eager reservation books " \
             "full lifetimes, which shared (refcounted) pages would double-count"
@@ -282,6 +373,13 @@ class Scheduler:
         self.resumes = 0
         self.resume_recompute_tokens = 0
         self.resume_events: Deque[dict] = deque(maxlen=256)
+        # resilience counters (PR 8): requests shed at add(), expired past
+        # their deadline, cancelled by the caller, or quarantined (a
+        # NaN-logit row retired with its pages kept out of the cache)
+        self.num_rejected = 0
+        self.num_timeouts = 0
+        self.num_cancels = 0
+        self.num_quarantines = 0
 
     # ------------------------------------------------------------------
     @property
@@ -293,16 +391,52 @@ class Scheduler:
         return len(self._free_slots)
 
     def add(self, req: Request) -> None:
-        assert req.kv_budget <= self.max_len, \
-            f"request {req.rid}: KV budget {req.kv_budget} (prompt " \
-            f"{req.prompt_len} + max_new {req.max_new} - 1) exceeds " \
-            f"engine max_len {self.max_len}"
-        assert self.pool.pages_for(req.kv_budget) <= self.pool.usable_pages, \
-            f"request {req.rid}: KV budget {req.kv_budget} can never fit " \
-            f"the pool ({self.pool.usable_pages} usable pages of " \
-            f"{self.pool.page_tokens} tokens) — it could neither run eagerly " \
-            f"nor survive preemption (cached pages don't help: they are " \
-            f"reclaimable, not extra capacity)"
+        """Queue one request, or refuse it with a typed
+        :class:`AdmissionError` — ``kind="impossible"`` for a request that
+        could never run (caller bug), ``kind="queue-depth"`` /
+        ``"page-demand"`` for an overload shed when the bounded queue is
+        configured.  Sheds are decided *before* any state is taken, so a
+        rejection can never strand a slot or a page."""
+        if req.kv_budget > self.max_len:
+            raise AdmissionError(
+                req.rid, "impossible",
+                f"request {req.rid}: KV budget {req.kv_budget} (prompt "
+                f"{req.prompt_len} + max_new {req.max_new} - 1) exceeds "
+                f"engine max_len {self.max_len}")
+        if self.pool.pages_for(req.kv_budget) > self.pool.usable_pages:
+            raise AdmissionError(
+                req.rid, "impossible",
+                f"request {req.rid}: KV budget {req.kv_budget} can never "
+                f"fit the pool ({self.pool.usable_pages} usable pages of "
+                f"{self.pool.page_tokens} tokens) — it could neither run "
+                f"eagerly nor survive preemption (cached pages don't help: "
+                f"they are reclaimable, not extra capacity)")
+        # overload shed signals (bounded wait queue).  Preempted/paused
+        # requests re-enter via appendleft, never through add(), so already
+        # -admitted work is never shed here.
+        if self.queue_limit is not None \
+                and len(self.waiting) >= self.queue_limit:
+            self.num_rejected += 1
+            raise AdmissionError(
+                req.rid, "queue-depth",
+                f"request {req.rid} shed: wait queue at its bound "
+                f"({len(self.waiting)}/{self.queue_limit}) — admitting "
+                f"would queue unboundedly under overload")
+        if self.queue_pages is not None:
+            # predicted demand: prompt pages of every queued request that
+            # holds no pages yet, plus the incoming one (paused waiters'
+            # held pages are already booked, not future demand)
+            demand = self.pool.pages_for(req.prompt_len) + sum(
+                self.pool.pages_for(r.prompt_len) for r in self.waiting
+                if r.pages is None)
+            if demand > self.queue_pages:
+                self.num_rejected += 1
+                raise AdmissionError(
+                    req.rid, "page-demand",
+                    f"request {req.rid} shed: queued prompt-page demand "
+                    f"{demand} exceeds queue_pages={self.queue_pages} — "
+                    f"the backlog already outsizes what the pool can "
+                    f"drain promptly")
         req.status = "waiting"
         # insert in arrival order (stable: FCFS among equal arrivals), but
         # never ahead of preempted requests — they resume first regardless
@@ -341,49 +475,76 @@ class Scheduler:
             req = self.waiting.popleft()
             req.slot = self._free_slots.pop()
             was_preempted, was_reclaimed = req.preempted, req.reclaimed
+            fresh_pages = req.pages is None
             req.preempted = False
             req.reclaimed = False
             req.admit_seq = self._admit_counter
             self._admit_counter += 1
-            if req.pages is None:        # a paused request keeps its pages
-                req.pages = SequencePages(self.pool, owner=req.rid)
-                if self.prefix_cache is not None:
-                    self._acquire_prefix(req)
-                    if was_preempted:
-                        recompute = req.prompt_len - req.prefill_cursor
-                        self.resumes += 1
-                        self.resume_recompute_tokens += recompute
-                        self.resume_events.append({
-                            "rid": req.rid,
-                            "recompute": recompute,
-                            "generated_since": (len(req.out_tokens)
-                                                - req.out_at_admit),
-                            "reclaimed": was_reclaimed,
-                            # pool pressure may LRU-evict a victim's cached
-                            # pages before it resumes — the bound then
-                            # legitimately does not apply (output identity
-                            # always does)
-                            "evicted": req.prefill_cursor < min(
-                                req.cached_upto, req.prompt_len - 1)})
-            req.out_at_admit = len(req.out_tokens)
-            if self.chunk_tokens is not None:
-                # chunked: pages arrive with each chunk (plan_chunks); a
-                # resumed pause continues from its cursor, never from 0
-                assert req.prefill_cursor < req.prompt_len
-                req.status = "prefilling"
-                req.len = req.prefill_cursor
-                if self.eager:           # eager A/B: lifetime up front
-                    req.pages.ensure(req.kv_budget)
-            else:
-                req.status = "running"
-                # eager: reserve the whole lifetime; lazy: the prompt only —
-                # decode steps grow the block table via grow()
-                req.pages.ensure(req.kv_budget if self.eager
-                                 else req.prompt_len)
+            try:
+                self._take_pages(req, was_preempted, was_reclaimed)
+            except OutOfPages:
+                # _pages_available said yes but the allocation still
+                # failed (a cache eviction raced it, or a fault-injection
+                # harness spiked the allocator): undo the half-admission
+                # completely — nothing leaks, the head retries next step
+                if fresh_pages and req.pages is not None:
+                    req.pages.release()
+                    req.pages = None
+                    req.prefill_cursor = 0
+                    req.len = 0
+                self._free_slots.append(req.slot)
+                req.slot = -1
+                req.status = "waiting"
+                req.preempted = was_preempted
+                req.reclaimed = was_reclaimed
+                self.waiting.appendleft(req)
+                break
             self.running[req.slot] = req
             admitted.append(req)
         self.peak_running = max(self.peak_running, len(self.running))
         return admitted
+
+    def _take_pages(self, req: Request, was_preempted: bool,
+                    was_reclaimed: bool) -> None:
+        """The page-acquiring half of one admission (everything that can
+        raise :class:`OutOfPages`), split out so ``admit`` can roll the
+        whole thing back atomically when an allocation fails *after* the
+        availability check said yes."""
+        if req.pages is None:            # a paused request keeps its pages
+            req.pages = SequencePages(self.pool, owner=req.rid)
+            if self.prefix_cache is not None:
+                self._acquire_prefix(req)
+                if was_preempted:
+                    recompute = req.prompt_len - req.prefill_cursor
+                    self.resumes += 1
+                    self.resume_recompute_tokens += recompute
+                    self.resume_events.append({
+                        "rid": req.rid,
+                        "recompute": recompute,
+                        "generated_since": (len(req.out_tokens)
+                                            - req.out_at_admit),
+                        "reclaimed": was_reclaimed,
+                        # pool pressure may LRU-evict a victim's cached
+                        # pages before it resumes — the bound then
+                        # legitimately does not apply (output identity
+                        # always does)
+                        "evicted": req.prefill_cursor < min(
+                            req.cached_upto, req.prompt_len - 1)})
+        req.out_at_admit = len(req.out_tokens)
+        if self.chunk_tokens is not None:
+            # chunked: pages arrive with each chunk (plan_chunks); a
+            # resumed pause continues from its cursor, never from 0
+            assert req.prefill_cursor < req.prompt_len
+            req.status = "prefilling"
+            req.len = req.prefill_cursor
+            if self.eager:               # eager A/B: lifetime up front
+                req.pages.ensure(req.kv_budget)
+        else:
+            req.status = "running"
+            # eager: reserve the whole lifetime; lazy: the prompt only —
+            # decode steps grow the block table via grow()
+            req.pages.ensure(req.kv_budget if self.eager
+                             else req.prompt_len)
 
     def _acquire_prefix(self, req: Request) -> None:
         """Start ``req`` at its longest cached prefix: matched pages are
@@ -404,7 +565,10 @@ class Scheduler:
         if hit % self.pool.page_tokens:
             try:
                 self.pool.cow(req.pages, len(pages) - 1)
-            except OutOfPages:
+            except PoolError:
+                # no page for the copy, or the device copy itself failed
+                # (PoolError wraps page_copier errors): hand the tail page
+                # back and re-prefill its block — degraded, never wrong
                 self.pool.free([req.pages.pages.pop()])
                 hit = len(req.pages.pages) * self.pool.page_tokens
         req.prefill_cursor = hit
@@ -697,6 +861,74 @@ class Scheduler:
         req.slot = -1
         req.status = "finished"
 
+    def cancel(self, rid: int, reason: str = "cancelled", *,
+               cache_pages: bool = True) -> Optional[Request]:
+        """Retire request ``rid`` from *any* live state — queued (fresh,
+        paused or preempted), prefilling, or decoding (including right
+        after a speculative rollback: ``out_tokens``/``len`` only ever
+        cover accepted tokens, so there is no partial state to corrupt).
+        The slot (if held) is returned, pages are released — into the
+        prefix cache when attached and ``cache_pages=True`` (the committed
+        KV is valid; a later identical prompt may reuse it), straight to
+        the free list when the KV is suspect (``cache_pages=False``: the
+        engine's NaN-logit quarantine) — and the request finishes with
+        ``finish_reason=reason`` (``"cancelled"`` | ``"timeout"`` |
+        ``"error"``).  Returns the request, or ``None`` when ``rid`` is
+        not live (already finished, never added, or shed at add)."""
+        for i, r in enumerate(self.waiting):
+            if r.rid == rid:
+                del self.waiting[i]
+                return self._retire_cancelled(r, reason, cache_pages)
+        for slot, r in list(self.running.items()):
+            if r.rid == rid:
+                del self.running[slot]
+                self._free_slots.append(slot)
+                r.slot = -1
+                return self._retire_cancelled(r, reason, cache_pages)
+        return None
+
+    def _retire_cancelled(self, req: Request, reason: str,
+                          cache_pages: bool) -> Request:
+        if req.pages is not None:
+            if cache_pages and self.prefix_cache is not None \
+                    and req.pages.pages:
+                # same contract as preemption: positions 0..len-1 hold
+                # committed KV (cursor for a mid-prefill victim), capped at
+                # the prompt — the cache takes its references before ours
+                # drop, so full pages survive for a future identical prompt
+                upto = min(max(req.len, req.prefill_cursor), req.prompt_len)
+                self.prefix_cache.insert(req.prompt, req.pages.pages, upto)
+            req.pages.release()
+            req.pages = None
+        req.prefill_cursor = 0
+        req.len = 0
+        req.status = "finished"
+        req.finish_reason = reason
+        if reason == "timeout":
+            self.num_timeouts += 1
+        elif reason == "error":
+            self.num_quarantines += 1
+        else:
+            self.num_cancels += 1
+        return req
+
+    def expire(self, now: Optional[float]) -> List[Request]:
+        """Cancel-as-timeout every live request past its deadline at time
+        ``now``: ``deadline_s`` bounds the whole lifetime in any state,
+        ``max_queue_s`` only the wait before the first admission.  Run by
+        the engine at the top of each step (before admission, so a doomed
+        head never takes a slot).  ``now=None`` (an untimed drain) checks
+        nothing — deadlines need the caller's clock."""
+        if now is None:
+            return []
+        stale = [r for r in list(self.waiting) + list(self.running.values())
+                 if (r.deadline_s is not None
+                     and now - r.arrival >= r.deadline_s)
+                 or (r.max_queue_s is not None and r.admit_seq < 0
+                     and r.status == "waiting"
+                     and now - r.arrival >= r.max_queue_s)]
+        return [self.cancel(r.rid, "timeout") for r in stale]
+
     def stats(self) -> dict:
         """Scheduler-side counters (cumulative; pool stats live on the
         pool).  ``prefilling``/``decoding`` split the running set by state;
@@ -717,4 +949,10 @@ class Scheduler:
             "chunk_tokens": self.chunk_tokens,
             "resumes": self.resumes,
             "resume_recompute_tokens": self.resume_recompute_tokens,
+            "queue_limit": self.queue_limit,
+            "queue_pages": self.queue_pages,
+            "num_rejected": self.num_rejected,
+            "num_timeouts": self.num_timeouts,
+            "num_cancels": self.num_cancels,
+            "num_quarantines": self.num_quarantines,
         }

@@ -121,8 +121,16 @@ def accept_tokens(req: Request, drafts: List[int], logits_rows: np.ndarray,
     ``appended - accepted`` is always 1 except on an early stop, and
     ``req.len`` is NOT advanced — the engine owns cache-length accounting.
     """
-    assert 1 <= n_eff <= logits_rows.shape[0]
-    assert len(drafts) >= n_eff - 1
+    # typed, -O-proof: a wrong verify width here would silently corrupt
+    # the identity contract, not just crash — never let it be stripped
+    if not 1 <= n_eff <= logits_rows.shape[0]:
+        raise ValueError(
+            f"accept_tokens: n_eff={n_eff} outside the verify rows "
+            f"[1, {logits_rows.shape[0]}] for rid {req.rid}")
+    if len(drafts) < n_eff - 1:
+        raise ValueError(
+            f"accept_tokens: {len(drafts)} drafts cannot cover "
+            f"n_eff={n_eff} fed tokens for rid {req.rid}")
     appended = accepted = 0
     for j in range(n_eff):
         tok = pick(logits_rows[j], req)

@@ -247,6 +247,25 @@ def test_seeded_raw_capacity_assert(tmp_path):
     assert "free_pages" in findings[0].message
 
 
+def test_seeded_raw_capacity_raise_guard(tmp_path):
+    """The PR-8 typed-exception conversion must not be a lint escape
+    hatch: an `if <raw capacity>: raise ...` guard is flagged exactly
+    like the assert it replaced, while guards on num_available pass."""
+    serving = tmp_path / "serving"
+    serving.mkdir()
+    bad = serving / "sched_patch.py"
+    bad.write_text(
+        "def admit(pool, need):\n"
+        "    if need > pool.num_free:\n"
+        "        raise AdmissionError(0, 'page-demand', 'full')\n"
+        "    if need > pool.num_available:\n"
+        "        raise AdmissionError(0, 'page-demand', 'full')\n")
+    findings = lint_paths([serving], serving_root=serving)
+    assert [f.rule for f in findings] == ["capacity-asserts"]
+    assert "num_free" in findings[0].message
+    assert "sched_patch.py:2" in findings[0].where
+
+
 def test_seeded_unseeded_randomness(tmp_path):
     bad = tmp_path / "noise.py"
     bad.write_text(

@@ -26,8 +26,9 @@ from repro.core.hardware import presets
 from repro.core.layout import make_layout
 from repro.models.model import build_model
 from repro.serving.engine import Engine
-from repro.serving.kv_cache import OutOfPages, PagedKVPool, SequencePages
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.kv_cache import (OutOfPages, PagedKVPool, PoolError,
+                                    SequencePages)
+from repro.serving.scheduler import AdmissionError, Request, Scheduler
 
 RUN = RunConfig(param_dtype="float32", compute_dtype="float32", remat=False)
 
@@ -110,11 +111,11 @@ def test_double_free_and_foreign_free_detected():
     pool = PagedKVPool(4, 8)
     p = pool.alloc()
     pool.free([p])
-    with pytest.raises(AssertionError):
+    with pytest.raises(PoolError):
         pool.free([p])                       # double-free
-    with pytest.raises(AssertionError):
+    with pytest.raises(PoolError):
         pool.free([3])                       # never allocated
-    with pytest.raises(AssertionError):
+    with pytest.raises(PoolError):
         pool.free([0])                       # the trash page is never owned
     # a request's rollback path (ensure failure) must not double-free either
     seq = SequencePages(pool)
@@ -163,7 +164,7 @@ def test_admission_waits_for_slots_and_pages():
 def test_request_budget_checked_against_max_len():
     pool = PagedKVPool(8, 8)
     sched = Scheduler(max_slots=2, pool=pool, max_len=16)
-    with pytest.raises(AssertionError):
+    with pytest.raises(AdmissionError):
         sched.add(Request(rid=0, prompt=np.zeros(10, np.int32), max_new=10))
 
 
@@ -172,7 +173,7 @@ def test_request_budget_checked_against_pool_capacity():
     deadlock the preemption loop — add() must reject it."""
     pool = PagedKVPool(1 + 2, 8)                 # 2 usable pages = 16 tokens
     sched = Scheduler(max_slots=2, pool=pool, max_len=48)
-    with pytest.raises(AssertionError):
+    with pytest.raises(AdmissionError):
         sched.add(_req(0, 8, 17))                # budget 24 > 16
     sched.add(_req(1, 8, 9))                     # budget 16 fits exactly
 
