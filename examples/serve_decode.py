@@ -29,14 +29,24 @@ stalls, chunks per prompt, acceptance rate, draft overhead, hit rate, CoW
 copies, compile counts, plus the resilience block — sheds, timeouts,
 cancels, quarantines, watchdog trips) are printed at the end.
 
+With ``--trace-out PATH`` / ``--metrics-json PATH`` the drain runs with
+the :mod:`repro.obs` telemetry subsystem live: the former writes a
+Chrome ``trace_event`` JSON (open in Perfetto or ``chrome://tracing`` —
+one track per slot plus engine/scheduler/pool), the latter dumps the
+full streaming-metrics registry snapshot; either flag also prints a
+compact TTFT/ITL percentile table at the end of the drain.  Telemetry
+is host-side only — the tokens are identical with it on or off.
+
 Run:  PYTHONPATH=src python examples/serve_decode.py --arch smollm2-135m
 Fused:                     ... serve_decode.py --chunk-tokens 16
 Speculative:               ... serve_decode.py --spec-tokens 3
 Prompt caching:            ... serve_decode.py --prefix-cache
 Overload:                  ... serve_decode.py --queue-limit 2 --deadline 8
+Telemetry:                 ... serve_decode.py --trace-out /tmp/serve.json
 """
 
 import argparse
+import json
 import time
 
 import jax
@@ -83,7 +93,17 @@ def main():
                     "step): requests still unfinished this long after "
                     "arrival finish as 'timeout' with their pages released")
     ap.add_argument("--sample", action="store_true")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="run with telemetry on and write a Chrome "
+                    "trace_event JSON (Perfetto / chrome://tracing) of "
+                    "the drain: per-slot prefill/decode spans, queue "
+                    "waits, preempt/pause/shed instants, step phases")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="run with telemetry on and dump the full "
+                    "streaming-metrics registry snapshot (counters, "
+                    "gauges, latency histograms) as JSON")
     args = ap.parse_args()
+    want_obs = args.trace_out is not None or args.metrics_json is not None
 
     cfg = reduced_config(get_config(args.arch))
     shape = ShapeSpec("serve", args.max_len, args.slots, "decode")
@@ -97,7 +117,8 @@ def main():
                     chunk_tokens=args.chunk_tokens,
                     spec_tokens=args.spec_tokens,
                     prefix_cache=args.prefix_cache,
-                    queue_limit=args.queue_limit)
+                    queue_limit=args.queue_limit,
+                    telemetry=want_obs)
     rng = np.random.default_rng(1)
     key = jax.random.PRNGKey(1)
 
@@ -194,6 +215,23 @@ def main():
               f"draft overhead {sp['draft_overhead']:.2f}, "
               f"{sp['rollback_pages']} pages rolled back "
               f"({sp['drafter']})")
+    if want_obs:
+        tel = engine.telemetry()
+        print("[serve] latency percentiles (s):")
+        print(f"  {'':<14}{'count':>6}{'p50':>10}{'p95':>10}{'p99':>10}"
+              f"{'max':>10}")
+        for name, snap in tel["latency"].items():
+            print(f"  {name:<14}{snap['count']:>6}{snap['p50']:>10.4f}"
+                  f"{snap['p95']:>10.4f}{snap['p99']:>10.4f}"
+                  f"{snap['max']:>10.4f}")
+        if args.metrics_json:
+            with open(args.metrics_json, "w") as f:
+                json.dump(tel["metrics"], f, indent=2, sort_keys=True)
+            print(f"[serve] metrics snapshot -> {args.metrics_json}")
+        if args.trace_out:
+            engine.obs.export_trace(args.trace_out)
+            n = len(engine.obs.tracer.events())
+            print(f"[serve] Perfetto trace ({n} events) -> {args.trace_out}")
     for r in sorted(finished, key=lambda r: r.rid):
         print(f"  rid={r.rid} arrive@{r.arrival:>4.0f} prompt={r.prompt_len:>3} "
               f"-> {len(r.out_tokens):>2} tokens ({r.finish_reason}): "

@@ -1,0 +1,149 @@
+#!/usr/bin/env python
+"""Bench regression gate — compare ``latest`` vs ``history[]`` medians.
+
+``benchmarks/bench_serving.py`` appends one timestamped report to
+``BENCH_serving.json``'s ``history[]`` per invocation and mirrors the
+newest into ``latest``.  This gate recomputes the **median** of each
+key ratio over the prior history (the newest entry is excluded — the
+run under test must not vote for its own baseline) and exits 1 when
+``latest`` regresses any of them by more than ``--tolerance`` (15%
+default):
+
+  =============================================  =================
+  ratio                                          regression means
+  =============================================  =================
+  throughput continuous/static (per layout)      dropped
+  chunked.throughput_ratio                       dropped
+  flat.offline_throughput_ratio                  dropped
+  speculative.ngram.decode_tokens_per_row_step   dropped
+  prefix_cache[mono/greedy].prefill_ratio        **rose** (lower
+                                                 is better: it is
+                                                 the fraction of
+                                                 prefill work left
+                                                 after cache hits)
+  =============================================  =================
+
+Medians (not means) so one noisy CI run cannot shift the baseline, and
+ratios (not absolute tok/s) so the gate is machine-portable.  Missing
+file, metric, or short history (< ``--min-history`` baseline samples
+after excluding the newest entry) skips that check with a note and
+exits 0 — the gate only ever fails on *evidence* of a regression.
+
+    python scripts/bench_check.py                     # default file
+    python scripts/bench_check.py --file other.json --tolerance 0.10
+"""
+
+import argparse
+import json
+import statistics
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# (label, path through the report dict, higher_is_better)
+CHECKS = [
+    ("throughput fixed continuous/static",
+     ("throughput", "fixed/continuous", "fixed/static"), True),
+    ("throughput scalable continuous/static",
+     ("throughput", "scalable/continuous", "scalable/static"), True),
+    ("chunked throughput ratio",
+     ("chunked", "throughput_ratio"), True),
+    ("flat offline throughput ratio",
+     ("flat", "offline_throughput_ratio"), True),
+    ("spec ngram decode tokens/row-step",
+     ("speculative", "ngram", "decode_tokens_per_row_step"), True),
+    ("prefix-cache prefill ratio (mono/greedy)",
+     ("prefix_cache", "mono/greedy", "prefill_ratio"), False),
+]
+
+
+def _extract(report, path):
+    """Resolve a metric path; the 3-element throughput paths are a
+    numerator/denominator pair under one section."""
+    if path[0] == "throughput":
+        sec = report.get("throughput")
+        if not isinstance(sec, dict):
+            return None
+        num, den = sec.get(path[1]), sec.get(path[2])
+        if not num or not den:
+            return None
+        return num / den
+    node = report
+    for key in path:
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return node if isinstance(node, (int, float)) else None
+
+
+def check(data, *, tolerance=0.15, min_history=2, out=print):
+    """Return the number of regressions (0 == gate passes)."""
+    latest = data.get("latest")
+    history = data.get("history", [])
+    if not isinstance(latest, dict):
+        out("bench_check: no 'latest' report — skipping gate")
+        return 0
+    # The newest history entry is this run's own report; baseline on
+    # what came before it.
+    baseline = [h.get("report", {}) for h in history[:-1]]
+
+    failures = 0
+    for label, path, higher_better in CHECKS:
+        cur = _extract(latest, path)
+        if cur is None:
+            out(f"  skip  {label}: absent from latest")
+            continue
+        past = [v for v in (_extract(r, path) for r in baseline)
+                if v is not None]
+        if len(past) < min_history:
+            out(f"  skip  {label}: {len(past)} baseline sample(s) "
+                f"(< {min_history})")
+            continue
+        med = statistics.median(past)
+        if med == 0:
+            out(f"  skip  {label}: zero baseline median")
+            continue
+        change = cur / med - 1.0
+        regressed = (change < -tolerance) if higher_better \
+            else (change > tolerance)
+        tag = "FAIL" if regressed else "ok"
+        out(f"  {tag:<5} {label}: latest {cur:.4f} vs median {med:.4f} "
+            f"over {len(past)} run(s) ({change:+.1%})")
+        failures += regressed
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--file", type=Path,
+                    default=REPO / "BENCH_serving.json")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed relative regression (default 0.15)")
+    ap.add_argument("--min-history", type=int, default=2,
+                    help="baseline samples required to gate a metric")
+    args = ap.parse_args()
+
+    if not args.file.exists():
+        print(f"bench_check: {args.file} not found — skipping gate")
+        return 0
+    try:
+        data = json.loads(args.file.read_text())
+    except (json.JSONDecodeError, OSError) as e:
+        print(f"bench_check: cannot read {args.file} ({e}) — skipping gate")
+        return 0
+
+    print(f"bench_check: {args.file.name}, tolerance "
+          f"{args.tolerance:.0%}, baseline = history medians")
+    failures = check(data, tolerance=args.tolerance,
+                     min_history=args.min_history)
+    if failures:
+        print(f"bench_check: {failures} regression(s) beyond "
+              f"{args.tolerance:.0%} — failing")
+        return 1
+    print("bench_check: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,11 @@
 #!/usr/bin/env python
 """AST invariant lint (analysis pass 4) — stdlib ``ast``, no jax import.
 
-Enforces the syntactic repo rules over ``src/repro/serving/`` and
-``src/repro/kernels/`` (see :mod:`repro.analysis.ast_lint`): allocator
-privacy, usable-pages capacity asserts, no unseeded randomness, kernel
-ref-oracles under test.  Exit 1 on any finding.
+Enforces the syntactic repo rules over ``src/repro/serving/``,
+``src/repro/obs/`` and ``src/repro/kernels/`` (see
+:mod:`repro.analysis.ast_lint`): allocator privacy, usable-pages
+capacity asserts, no unseeded randomness, monotonic clocks in
+serving/obs, kernel ref-oracles under test.  Exit 1 on any finding.
 
     python scripts/lint_invariants.py                 # default tree
     python scripts/lint_invariants.py src/repro       # a wider sweep
@@ -21,7 +22,8 @@ sys.path.insert(0, str(REPO / "src"))
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("paths", nargs="*", type=Path,
-                    help="files/dirs to lint (default: serving + kernels)")
+                    help="files/dirs to lint (default: serving + kernels "
+                         "+ obs)")
     ap.add_argument("--no-oracles", action="store_true",
                     help="skip the kernel-oracle rule (tests dir scan)")
     args = ap.parse_args()
@@ -30,8 +32,10 @@ def main() -> int:
 
     serving = REPO / "src" / "repro" / "serving"
     kernels = REPO / "src" / "repro" / "kernels"
-    paths = args.paths or [serving, kernels]
-    findings = lint_paths(paths, serving_root=serving)
+    obs = REPO / "src" / "repro" / "obs"
+    paths = args.paths or [serving, kernels, obs]
+    findings = lint_paths(paths, serving_root=serving,
+                          clock_roots=(serving, obs))
     if not args.no_oracles and (REPO / "tests").is_dir():
         findings += lint_kernel_oracles(kernels, REPO / "tests")
 

@@ -13,7 +13,9 @@
 #   preempt-resume must recompute only the uncached suffix) —
 #   lazy-allocation/preemption regressions and any chunked-vs-monolithic,
 #   spec-vs-baseline, or cache-on-vs-cache-off output mismatch (greedy or
-#   sampled) fail the run without the full bench)
+#   sampled) fail the run without the full bench; afterwards
+#   scripts/bench_check.py gates the fresh BENCH_serving.json entry
+#   against its history medians — >15% regression of a key ratio fails)
 # With the layout-contract analyzer:  ./scripts/tier1.sh --analyze
 #   (runs all four analysis passes — shape-ladder linter, KV-write
 #   aliasing pass, recompile-hazard detector, AST invariant lint — plus
@@ -45,6 +47,7 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 if [[ "$BENCH_SMOKE" == 1 ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_serving.py --smoke --skip-throughput
+  python scripts/bench_check.py
 fi
 
 if [[ "$ANALYZE" == 1 ]]; then

@@ -24,6 +24,13 @@ Repo rules that no runtime test can see, enforced syntactically over
   (``kernels/*/kernel.py``) keeps a ``ref.py`` jnp oracle *and* some
   test imports it (the module, or a name it defines): the oracle is the
   kernel's spec, and an unimported spec rots.
+* **monotonic-clock** — wall-time *measurement* in ``src/repro/serving``
+  and ``src/repro/obs`` must use ``time.perf_counter()``, never
+  ``time.time()``: telemetry spans, step timings, and latency
+  histograms subtract clock readings, and the wall clock can step
+  backwards under NTP adjustment, silently producing negative spans.
+  Deadline arithmetic against a caller-provided ``now=`` is untouched —
+  the rule flags only ``time.time()`` call sites.
 """
 
 from __future__ import annotations
@@ -70,13 +77,16 @@ def _dotted(node) -> Optional[List[str]]:
 
 class _FileLinter(ast.NodeVisitor):
     def __init__(self, path: Path, *, allocator_owner: bool,
-                 serving_file: bool):
+                 serving_file: bool, clock_file: bool = False):
         self.path = path
         self.allocator_owner = allocator_owner
         self.serving_file = serving_file
+        self.clock_file = clock_file         # monotonic-clock rule applies
         self.findings: List[Finding] = []
         self._numpy_aliases = {"numpy"}      # names that mean the numpy module
         self._stdlib_random_aliases = set()  # names that mean stdlib random
+        self._time_aliases = set()           # names that mean the time module
+        self._walltime_names = set()         # names bound to time.time itself
 
     def _add(self, rule: str, node, message: str) -> None:
         self.findings.append(Finding(
@@ -91,6 +101,8 @@ class _FileLinter(ast.NodeVisitor):
                 self._stdlib_random_aliases.add(name)
             elif a.name.split(".")[0] == "numpy":
                 self._numpy_aliases.add(name)
+            elif a.name == "time":
+                self._time_aliases.add(name)
         self.generic_visit(node)
 
     def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
@@ -102,6 +114,10 @@ class _FileLinter(ast.NodeVisitor):
                               f"global-state RNG draw into deterministic "
                               f"serving code — use a seeded "
                               f"np.random.Generator or jax.random key")
+        if node.module == "time":
+            for a in node.names:
+                if a.name == "time":
+                    self._walltime_names.add(a.asname or a.name)
         self.generic_visit(node)
 
     # ---- allocator privacy -------------------------------------------
@@ -151,7 +167,22 @@ class _FileLinter(ast.NodeVisitor):
         parts = _dotted(fn)
         if parts:
             self._check_random_call(node, parts)
+            if self.clock_file:
+                self._check_clock_call(node, parts)
         self.generic_visit(node)
+
+    def _check_clock_call(self, node, parts: List[str]) -> None:
+        wall = ((len(parts) == 2 and parts[0] in self._time_aliases
+                 and parts[1] == "time")
+                or (len(parts) == 1 and parts[0] in self._walltime_names))
+        if wall:
+            self._add("monotonic-clock", node,
+                      f"'{'.'.join(parts)}(...)' reads the adjustable wall "
+                      f"clock — serving/obs wall-time measurement must use "
+                      f"time.perf_counter(), which is monotonic (NTP can "
+                      f"step time.time() backwards and produce negative "
+                      f"spans); deadline math on a caller-supplied now= "
+                      f"needs no clock read at all")
 
     def _check_random_call(self, node, parts: List[str]) -> None:
         head, tail = parts[0], parts[-1]
@@ -212,30 +243,36 @@ class _FileLinter(ast.NodeVisitor):
         self.generic_visit(node)
 
 
-def lint_file(path: Path, *, serving_root: Optional[Path] = None
-              ) -> List[Finding]:
+def lint_file(path: Path, *, serving_root: Optional[Path] = None,
+              clock_roots: tuple = ()) -> List[Finding]:
+    """Lint one file.  ``serving_root`` scopes the capacity-asserts rule;
+    ``clock_roots`` (directories) scope the monotonic-clock rule — pass
+    the serving *and* obs package roots so both stay on
+    ``time.perf_counter()``."""
     path = Path(path)
     try:
         tree = ast.parse(path.read_text(), filename=str(path))
     except SyntaxError as e:
         return [Finding(_PASS, "syntax", f"{path}:{e.lineno}",
                         f"unparseable: {e.msg}")]
-    serving_file = (serving_root is not None
-                    and serving_root in path.resolve().parents)
+    parents = path.resolve().parents
+    serving_file = serving_root is not None and serving_root in parents
+    clock_file = any(Path(r) in parents for r in clock_roots)
     linter = _FileLinter(path, allocator_owner=path.name == "kv_cache.py",
-                         serving_file=serving_file)
+                         serving_file=serving_file, clock_file=clock_file)
     linter.visit(tree)
     return linter.findings
 
 
-def lint_paths(paths, *, serving_root: Optional[Path] = None
-               ) -> List[Finding]:
+def lint_paths(paths, *, serving_root: Optional[Path] = None,
+               clock_roots: tuple = ()) -> List[Finding]:
     findings: List[Finding] = []
     for root in paths:
         root = Path(root)
         files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
         for p in files:
-            findings.extend(lint_file(p, serving_root=serving_root))
+            findings.extend(lint_file(p, serving_root=serving_root,
+                                      clock_roots=clock_roots))
     return findings
 
 

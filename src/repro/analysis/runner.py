@@ -100,15 +100,17 @@ def _repo_dirs():
     # repro is a namespace package (no __init__), so anchor on a module
     src_pkg = Path(__file__).resolve().parent.parent
     repo = src_pkg.parent.parent
-    return (src_pkg / "serving", src_pkg / "kernels", repo / "tests")
+    return (src_pkg / "serving", src_pkg / "kernels", src_pkg / "obs",
+            repo / "tests")
 
 
 def run_ast_lint(report: Optional[AnalysisReport] = None) -> AnalysisReport:
     """Pass 4 standalone (also reached via ``scripts/lint_invariants.py``)."""
     report = report if report is not None else AnalysisReport()
-    serving_dir, kernels_dir, tests_dir = _repo_dirs()
-    report.extend(ast_lint.lint_paths([serving_dir, kernels_dir],
-                                      serving_root=serving_dir),
+    serving_dir, kernels_dir, obs_dir, tests_dir = _repo_dirs()
+    report.extend(ast_lint.lint_paths([serving_dir, kernels_dir, obs_dir],
+                                      serving_root=serving_dir,
+                                      clock_roots=(serving_dir, obs_dir)),
                   section="ast-lint:src")
     if tests_dir.is_dir():
         report.extend(ast_lint.lint_kernel_oracles(kernels_dir, tests_dir),

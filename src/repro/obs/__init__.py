@@ -1,0 +1,80 @@
+"""``repro.obs`` — serving observability: lifecycle tracing, streaming
+metrics, Perfetto trace export.
+
+Zero-dependency (stdlib only) and strictly host-side: every event is a
+Python method call timed with ``time.perf_counter()``; nothing here
+touches a jitted code path, a device array, or the token math.  The
+standing serving invariants therefore hold by construction — telemetry
+on/off is token-identical, adds zero post-warmup XLA traces, and the
+disabled default (:data:`~repro.obs.telemetry.NULL`) costs one no-op
+call per event with no clock reads (all checked in ``tests/test_obs.py``).
+
+Event taxonomy
+==============
+
+**Request lifecycle** (per-request; mirrors the scheduler's state
+machine, see :mod:`repro.serving.scheduler`).  Durations render as
+spans, transitions as instants; each also lands in the request's own
+``obs_events`` list as ``(label, t)``:
+
+========================  ==========================================
+event                     meaning
+========================  ==========================================
+``queued``                entered the scheduler's waiting queue
+``admitted``              took a slot (queue-wait span closes)
+``prefill_chunk``         one chunk of prompt KV written (span per
+                          chunk on the slot's track)
+``prefill_done``          prompt KV complete; decode span opens
+``preempted``             pages released, tokens folded, requeued
+``paused``                mid-prefill victim: slot surrendered,
+                          pages + cursor kept, requeued
+``reclaimed``             a paused request's pages were reclaimed
+``finished``              happy-path exit (eos | length)
+``cancelled:<reason>``    retired early: ``timeout`` | ``cancelled``
+                          | ``error`` (the NaN-logit quarantine)
+``shed:<kind>``           rejected at ``add()`` by admission control
+                          (never queued)
+========================  ==========================================
+
+**Step phases** (per engine step, on the ``engine`` track): a ``step``
+span wrapping ``device`` (jitted forward) and ``draft`` (drafter
+proposal) sub-spans; host planning time is the remainder.
+
+**Component instants**: ``cow`` (copy-on-write page split),
+``prefix_hit`` / ``prefix_evict`` (prefix cache), ``spec_rollback``
+(rejected speculative pages truncated), ``drafter_error``,
+``fault:<kind>`` (injected by :mod:`repro.serving.faults`).
+
+Streaming metrics
+=================
+
+A :class:`~repro.obs.metrics.MetricsRegistry` of counters, gauges, and
+fixed-bucket geometric histograms (p50/p95/p99 without retaining
+samples): TTFT, ITL, queue wait, e2e latency, and the per-step
+wall/host/device/draft breakdown.  Reset semantics are explicit and
+documented in :mod:`repro.obs.metrics` — drain-scoped metrics reset
+only via ``Engine.telemetry(reset=True)``; lifetime metrics never.
+``Engine.telemetry()`` is the one unified view: components' classic
+``stats()`` dicts + the registry snapshot + headline percentiles.
+
+Trace file format
+=================
+
+Chrome ``trace_event`` JSON (the ``{"traceEvents": [...]}`` flavour),
+loadable in Perfetto or ``chrome://tracing``; microsecond timestamps
+relative to recorder birth.  One track (thread) per serving slot plus
+``engine`` / ``scheduler`` / ``pool`` tracks; ``"X"`` complete spans
+for prefill chunks, decode runs, and step phases; ``"b"``/``"e"``
+async spans for (overlapping) queue waits keyed by rid; ``"i"``
+instants for the transition events above; ``"C"`` counters for pool
+occupancy and scheduler load.  Details in :mod:`repro.obs.trace`.
+"""
+
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.telemetry import NULL, NullTelemetry, Telemetry
+from repro.obs.trace import TraceRecorder
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "NULL", "NullTelemetry", "Telemetry", "TraceRecorder",
+]

@@ -107,6 +107,8 @@ from repro.core.layout import ceil_div, round_up
 from repro.core.linear import prepack_params
 from repro.distributed import sharding
 from repro.models.model import ReproModel
+from repro.obs.telemetry import NULL as OBS_NULL
+from repro.obs.telemetry import NullTelemetry, Telemetry
 from repro.serving.faults import StallError
 from repro.serving.kv_cache import (PagedKVPool, PoolError, copy_pages,
                                     fresh_slot_states, merge_slot,
@@ -135,9 +137,16 @@ class Engine:
                  queue_limit: Optional[int] = None,
                  queue_pages: Optional[int] = None,
                  watchdog_steps: int = 64,
-                 nan_guard: bool = True):
+                 nan_guard: bool = True,
+                 telemetry=False):
         self.model = model
         self.mesh = mesh
+        # observability (repro.obs): ``telemetry=True`` builds a live
+        # Telemetry (metrics + trace recorder), a Telemetry instance is
+        # used as-is, and the default keeps the no-op NULL recorder —
+        # every instrumentation point below is then a single no-op call
+        self.obs = (telemetry if isinstance(telemetry, NullTelemetry)
+                    else Telemetry() if telemetry else OBS_NULL)
         self.params = (prepack_params(params, model.ctx)
                        if prepack and model.cfg.family != "encdec" else params)
         # static-batch path (encdec/vlm generate, throughput baselines);
@@ -212,6 +221,7 @@ class Engine:
         if num_pages is None:
             num_pages = 1 + self.slots * ceil_div(max_len, page_tokens)
         self.pool = PagedKVPool(num_pages, page_tokens)
+        self.pool.obs = self.obs
         self.max_pages = ceil_div(max_len, self.pool.page_tokens)
         # layout-keyed prefix cache: pages are shared byte-for-byte across
         # requests, so the hash chain is rooted in the layout geometry — a
@@ -231,6 +241,7 @@ class Engine:
                 "double-count)"
             self.prefix_cache = PrefixCache(self.pool,
                                             layout_key=(layout.m_r,))
+            self.prefix_cache.obs = self.obs
             self.pool.page_copier = self._copy_page
         self.scheduler = Scheduler(self.slots, self.pool, max_len,
                                    eager=eager,
@@ -239,7 +250,8 @@ class Engine:
                                    chunk_align=layout.m_r,
                                    prefix_cache=self.prefix_cache,
                                    queue_limit=queue_limit,
-                                   queue_pages=queue_pages)
+                                   queue_pages=queue_pages,
+                                   telemetry=self.obs)
         # resilience ladder (overload + fault handling; faults.py injects,
         # this engine degrades): shed/cancelled requests leave through an
         # out-of-band finished buffer, a stuck drain trips the watchdog,
@@ -278,6 +290,7 @@ class Engine:
                     f"shape ladder must cover the verify width"
             self.drafter = drafter if drafter is not None else NgramDrafter()
             self.drafter.attach(self)
+            self.drafter.obs = self.obs
         else:
             assert drafter is None, "a drafter needs spec_tokens set"
         # step counters (Engine.stats)
@@ -286,6 +299,11 @@ class Engine:
         self._active_rows = 0            # rows with new_counts > 0, summed
         self._mixed_steps = 0            # steps carrying >= 1 prefill chunk
         self._finished_count = 0
+        self._finished_served = 0        # finished AND actually ran (was
+                                         # admitted): the chunks-per-prompt
+                                         # denominator — shed/expired-in-
+                                         # queue rows never prefilled, so
+                                         # counting them would understate it
         self._chunk_steps_total = 0      # prefill calls/chunks over finished
         self._prefill_tokens = 0         # prompt tokens actually computed
                                          # (cache hits skip theirs)
@@ -365,6 +383,7 @@ class Engine:
                 raise              # a config error, not an overload signal
             req.status = "finished"
             req.finish_reason = "rejected"
+            self.obs.request_shed(req, e.kind)
             self._finished_oob.append(req)
         return rid
 
@@ -403,8 +422,9 @@ class Engine:
             "mixed_steps": self._mixed_steps,
             "prefill_stall_steps": self.scheduler.prefill_stall_steps,
             "chunks_per_prompt": (self._chunk_steps_total
-                                  / max(1, self._finished_count)),
+                                  / max(1, self._finished_served)),
             "finished": self._finished_count,
+            "finished_served": self._finished_served,
             "num_preemptions": self.scheduler.num_preemptions,
             "num_pauses": self.scheduler.num_pauses,
             "prefill_tokens": self._prefill_tokens,
@@ -460,6 +480,39 @@ class Engine:
             }
         return out
 
+    def telemetry(self, *, reset: bool = False) -> dict:
+        """The unified observability view (continuous engine):
+
+        - ``components`` — the classic per-component :meth:`stats` tree
+          (engine/scheduler/pool/prefix-cache/drafter counters).  These
+          are **lifetime**-cumulative and are never reset, with two
+          documented exceptions that are per-drain by design
+          (``spec_disabled`` and the drafter fail streak reset at the top
+          of every :meth:`drain`) and one bounded window
+          (``scheduler.resume_events``, a 256-entry deque).
+        - ``metrics`` — the streaming registry snapshot (counters,
+          gauges, histograms with p50/p95/p99); its ``_scope`` map labels
+          each metric ``drain`` or ``lifetime``.
+        - ``latency`` — the headline percentile summaries (TTFT, ITL,
+          queue wait, e2e), empty when telemetry is off.
+
+        ``reset=True`` zeroes the **drain-scoped registry metrics only**,
+        after the snapshot is taken — the explicit per-drain reset (see
+        :mod:`repro.obs.metrics`); nothing resets implicitly, so two
+        drains without a reset read as one window, never double-counted.
+        ``stats()`` counters are untouched by ``reset``."""
+        obs = self.obs
+        out = {
+            "enabled": obs.enabled,
+            "components": self.stats() if self.continuous else {},
+            "metrics": (obs.registry.snapshot()
+                        if obs.registry is not None else {}),
+            "latency": obs.latency_summary() if obs.enabled else {},
+        }
+        if reset and obs.registry is not None:
+            obs.registry.reset("drain")
+        return out
+
     def step(self, *, now: Optional[float] = None, greedy: bool = True,
              seed: int = 0) -> List[Request]:
         """One engine step: admit, grow (displacing on pool exhaustion),
@@ -473,6 +526,7 @@ class Engine:
         ``deadline_s``/``max_queue_s`` elapsed, with finish reasons
         ``rejected``/``cancelled``/``timeout``/``error``."""
         t0 = time.perf_counter()
+        self.obs.step_begin()
         finished = list(self._finished_oob)      # shed/cancelled since
         self._finished_oob.clear()               # the previous step
         if now is not None:
@@ -493,10 +547,13 @@ class Engine:
             self._watchdog(now)
         for req in finished:
             self._finished_count += 1
+            if req.admit_seq >= 0:
+                self._finished_served += 1
             self._chunk_steps_total += req.chunk_steps
             self._retired_rids.add(req.rid)
             if self.drafter is not None:
                 self.drafter.forget(req.rid)
+        self.obs.step_end(self.scheduler, self.pool, finished)
         return finished
 
     def _watchdog(self, now) -> None:
@@ -578,7 +635,9 @@ class Engine:
                 self._fill_decode_row(slot, req, neff[slot], drafts,
                                       token, lens, counts, bt, idx)
             self._active_rows += len(running)
+            td = self.obs.clock()
             rows = self._run_paged(token, bt, lens, counts, idx)
+            self.obs.device_span(td)
             for slot, req in list(running.items()):
                 self._verify_decode_row(req, drafts.get(slot, []), rows[slot],
                                         neff[slot], greedy, seed, finished)
@@ -650,7 +709,9 @@ class Engine:
         assert total_new <= max(self.token_budget, ndecode)
         self._active_rows += int((counts > 0).sum())
         self._mixed_steps += int(use_chunk)
+        td = self.obs.clock()
         rows = self._run_paged(token, bt, lens, counts, idx)
+        self.obs.device_span(td)
         for slot, req in list(running.items()):
             if req.status == "running":
                 self._verify_decode_row(req, drafts.get(slot, []), rows[slot],
@@ -668,6 +729,7 @@ class Engine:
                 req.len = req.prefill_cursor
                 req.chunk_steps += 1
                 self._prefill_tokens += n
+                self.obs.request_prefill_chunk(req, n)
                 if self.prefix_cache is not None:
                     # write newly-completed full pages into the cache as
                     # the cursor advances — a later arrival (or this
@@ -679,6 +741,7 @@ class Engine:
                 # prefill complete: the logits at the last prompt token are
                 # the first-token distribution, exactly as in monolithic
                 req.status = "running"
+                self.obs.request_prefill_done(req)
                 req.out_tokens.append(
                     self._pick(rows[slot, 0], req, greedy, seed))
                 if req.done():
@@ -761,7 +824,9 @@ class Engine:
         self._flat_steps += 1
         self._flat_tokens += total
         self._flat_width += w
+        td = self.obs.clock()
         rows = self._run_flat(token, bt, row_ids, q_pos, idx)
+        self.obs.device_span(td)
         rows = rows.reshape(self.slots, k1, -1)
         for slot, kind, n, req in segrefs:
             if kind == "decode":
@@ -775,12 +840,14 @@ class Engine:
             req.len = req.prefill_cursor
             req.chunk_steps += 1
             self._prefill_tokens += n
+            self.obs.request_prefill_chunk(req, n)
             if self.prefix_cache is not None:
                 self.prefix_cache.insert(req.prompt, req.pages.pages,
                                          req.prefill_cursor)
             if req.prefill_cursor < req.prompt_len:
                 continue                  # more chunks to come
             req.status = "running"
+            self.obs.request_prefill_done(req)
             req.out_tokens.append(
                 self._pick(rows[slot, 0], req, greedy, seed))
             if req.done():
@@ -861,6 +928,7 @@ class Engine:
             except Exception:
                 self._drafter_errors += 1
                 self._drafter_fail_streak += 1
+                self.obs.drafter_error()
                 if self._drafter_fail_streak >= self._drafter_fail_limit:
                     self._spec_disabled = True
                     self._spec_auto_disables += 1
@@ -872,6 +940,7 @@ class Engine:
                 if d:
                     drafts[slot_of[req.rid]] = d
         self._draft_time += time.perf_counter() - t0
+        self.obs.draft_span(t0)
         return drafts
 
     def _draft_and_grow(self):
@@ -958,10 +1027,13 @@ class Engine:
             self._drafted += n - 1
             self._accepted += accepted
             try:
-                self._rollback_pages += req.pages.truncate(req.len)
+                freed = req.pages.truncate(req.len)
             except PoolError:
                 self._quarantine(req, finished)
                 return
+            self._rollback_pages += freed
+            if freed:
+                self.obs.spec_rollback(req, freed)
             # mid-draft eos (or any early stop): the block table must end
             # exactly at the last committed token — a page past it could
             # carry rejected/post-eos draft KV into a later prefix-cache
@@ -1130,11 +1202,13 @@ class Engine:
         token[0, :n] = req.prompt[start:]
         bt = req.pages.block_row(self.max_pages)[None]
         view = prefill_view(self.caches, fresh_slot_states(self.caches))
+        td = self.obs.clock()
         logits, updated = self._paged_step(
             self.params, view, jnp.asarray(token), jnp.asarray(bt),
             jnp.full((1,), start, jnp.int32), jnp.full((1,), n, jnp.int32),
             None)
         row = np.asarray(logits[0, 0, :])
+        self.obs.device_span(td)
         if self.nan_guard and not np.isfinite(row).all():
             self.scheduler.cancel(req.rid, "error", cache_pages=False)
             return False
@@ -1143,6 +1217,8 @@ class Engine:
         req.prefill_cursor = l
         req.chunk_steps += 1        # a monolithic prefill is one big chunk
         self._prefill_tokens += n
+        self.obs.request_prefill_chunk(req, n)
+        self.obs.request_prefill_done(req)
         if self.prefix_cache is not None:
             self.prefix_cache.insert(req.prompt, req.pages.pages, l)
         req.out_tokens.append(self._pick(row, req, greedy, seed))

@@ -41,6 +41,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.telemetry import NULL as _NULL_OBS
 from repro.serving.kv_cache import OutOfPages
 
 __all__ = ["FAULT_KINDS", "FaultEvent", "FaultPlan", "InjectedFault",
@@ -95,6 +96,7 @@ class FaultPlan:
         self._step_no = 0
         self._installed = None
         self._undo: List[Tuple[object, str, object, bool]] = []
+        self._obs = _NULL_OBS          # the engine's recorder, on install
 
     @classmethod
     def random(cls, seed: int, *, steps: int = 32, num_events: int = 4,
@@ -115,6 +117,7 @@ class FaultPlan:
         if kind in self._armed:
             self._armed.remove(kind)
             self.fired[kind] += 1
+            self._obs.fault(kind, self._step_no - 1)
             return True
         return False
 
@@ -143,6 +146,7 @@ class FaultPlan:
             raise RuntimeError("FaultPlan is already installed")
         self._installed = engine
         self._step_no = 0
+        self._obs = getattr(engine, "obs", _NULL_OBS)
         plan = self
 
         orig_step = engine.step

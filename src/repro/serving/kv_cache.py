@@ -68,6 +68,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.layout import PackedLayout, ceil_div, round_up
+from repro.obs.telemetry import NULL as _NULL_OBS
 
 __all__ = ["PoolError", "OutOfPages", "PagedKVPool", "SequencePages",
            "copy_pages", "fresh_slot_states", "prefill_view", "merge_slot",
@@ -134,6 +135,7 @@ class PagedKVPool:
         self.cow_copies = 0
         self.reclaimer = None            # prefix cache, when enabled
         self.page_copier = None          # engine-installed device page copy
+        self.obs = _NULL_OBS             # telemetry; engine swaps in a live one
 
     @property
     def usable_pages(self) -> int:
@@ -260,6 +262,7 @@ class PagedKVPool:
         seq.pages[idx] = new
         self.free([old])
         self.cow_copies += 1
+        self.obs.cow()
         return new
 
     def stats(self) -> dict:

@@ -218,6 +218,7 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs.telemetry import NULL as _NULL_OBS
 from repro.serving.kv_cache import (OutOfPages, PagedKVPool, PoolError,
                                     SequencePages)
 
@@ -311,6 +312,9 @@ class Request:
     reclaimed: bool = False
     cached_upto: int = 0          # tokens whose pages entered the cache at
                                   # the last preempt (resume-eviction probe)
+    # telemetry: (label, t) lifecycle marks appended by repro.obs when the
+    # engine runs with telemetry on; stays empty under the NULL recorder
+    obs_events: List = dataclasses.field(default_factory=list)
 
     @property
     def prompt_len(self) -> int:
@@ -340,7 +344,7 @@ class Scheduler:
                  eager: bool = False, watermark_pages: int = 1,
                  chunk_tokens: Optional[int] = None, chunk_align: int = 1,
                  prefix_cache=None, queue_limit: Optional[int] = None,
-                 queue_pages: Optional[int] = None):
+                 queue_pages: Optional[int] = None, telemetry=None):
         self.max_slots = max_slots
         self.pool = pool
         self.max_len = max_len
@@ -353,6 +357,7 @@ class Scheduler:
         # predicted page demand; None = unbounded (the pre-PR-8 behavior)
         self.queue_limit = queue_limit
         self.queue_pages = queue_pages
+        self.obs = telemetry if telemetry is not None else _NULL_OBS
         assert prefix_cache is None or not eager, \
             "prefix cache needs lazy allocation: eager reservation books " \
             "full lifetimes, which shared (refcounted) pages would double-count"
@@ -446,6 +451,7 @@ class Scheduler:
         while i < n and self.waiting[i].arrival <= req.arrival:
             i += 1
         self.waiting.insert(i, req)
+        self.obs.request_queued(req)
 
     def admit(self, now: Optional[float] = None,
               limit: Optional[int] = None) -> List[Request]:
@@ -500,6 +506,7 @@ class Scheduler:
                 self.waiting.appendleft(req)
                 break
             self.running[req.slot] = req
+            self.obs.request_admitted(req)
             admitted.append(req)
         self.peak_running = max(self.peak_running, len(self.running))
         return admitted
@@ -769,7 +776,8 @@ class Scheduler:
         prefill from the cursor instead of recomputing written chunks."""
         assert req.status == "prefilling"
         assert self.running.get(req.slot) is req
-        del self.running[req.slot]
+        self.obs.request_paused(req)       # before the slot clears: the
+        del self.running[req.slot]         # instant lands on its track
         self._free_slots.append(req.slot)
         req.slot = -1
         req.status = "waiting"
@@ -807,6 +815,7 @@ class Scheduler:
         victim.reclaimed = True
         victim.num_preemptions += 1
         self.num_preemptions += 1
+        self.obs.request_reclaimed(victim)
         return True
 
     def _preempt(self, req: Request) -> None:
@@ -822,7 +831,8 @@ class Scheduler:
         for the re-admission lookup, the partial tail page returns to the
         free list, and the resume recomputes just the uncached suffix."""
         assert self.running.get(req.slot) is req
-        del self.running[req.slot]
+        self.obs.request_preempted(req)    # before the slot clears: the
+        del self.running[req.slot]         # instant lands on its track
         self._free_slots.append(req.slot)
         req.slot = -1
         # fold only the tokens generated since the last admission — earlier
@@ -855,7 +865,8 @@ class Scheduler:
     def finish(self, req: Request) -> None:
         """Evict: return the slot and the pages to the free lists."""
         assert self.running.get(req.slot) is req
-        del self.running[req.slot]
+        self.obs.request_finished(req)     # slot still valid: the decode
+        del self.running[req.slot]         # span closes on its track
         req.pages.release()
         self._free_slots.append(req.slot)
         req.slot = -1
@@ -878,11 +889,13 @@ class Scheduler:
         for i, r in enumerate(self.waiting):
             if r.rid == rid:
                 del self.waiting[i]
+                self.obs.request_cancelled(r, reason)
                 return self._retire_cancelled(r, reason, cache_pages)
         for slot, r in list(self.running.items()):
             if r.rid == rid:
                 del self.running[slot]
                 self._free_slots.append(slot)
+                self.obs.request_cancelled(r, reason)
                 r.slot = -1
                 return self._retire_cancelled(r, reason, cache_pages)
         return None

@@ -81,6 +81,7 @@ import numpy as np
 
 from repro.core.layout import round_up
 from repro.core.linear import prepack_params
+from repro.obs.telemetry import NULL as _NULL_OBS
 from repro.serving.scheduler import Request
 
 __all__ = ["Drafter", "NgramDrafter", "DraftModelDrafter", "accept_tokens",
@@ -158,6 +159,10 @@ class Drafter:
     too).
     """
 
+    # telemetry (repro.obs): the engine swaps in its live recorder after
+    # attach(); the class default keeps standalone drafters silent
+    obs = _NULL_OBS
+
     def attach(self, engine) -> None:
         """Bind engine-derived sizing/validation (called from Engine)."""
 
@@ -173,7 +178,9 @@ class Drafter:
         drafter overrides it to batch rows through its own step (one
         ``[slots, 1]`` call per draft position instead of ``k`` sequential
         ``[1, 1]`` calls per row)."""
-        return {req.rid: self.propose(req, k) for req, k in jobs}
+        out = {req.rid: self.propose(req, k) for req, k in jobs}
+        self.obs.draft_batch(len(jobs), sum(len(d) for d in out.values()))
+        return out
 
     def forget(self, rid: int) -> None:
         """Drop per-request state (the request finished)."""
@@ -433,6 +440,7 @@ class DraftModelDrafter(Drafter):
             # last proposed token
             st["spec"] = np.asarray(d[:-1], np.int32)
             out[p["req"].rid] = d
+        self.obs.draft_batch(len(jobs), sum(len(d) for d in out.values()))
         return out
 
     def _run_batch(self, token, bt, lens, counts) -> np.ndarray:

@@ -282,6 +282,38 @@ def test_seeded_unseeded_randomness(tmp_path):
     assert lines == {3, 4, 5}        # the two seeded constructions pass
 
 
+def test_seeded_wall_clock_in_serving(tmp_path):
+    """Seeded bug for the monotonic-clock rule: a timing patch in a
+    clock-ruled tree (serving/obs) that reads ``time.time()`` — via the
+    module, an alias, or ``from time import time`` — is flagged, while
+    ``perf_counter`` and deadline math on a caller-supplied ``now=``
+    stay clean."""
+    obs = tmp_path / "obs"
+    obs.mkdir()
+    bad = obs / "timing_patch.py"
+    bad.write_text(
+        "import time\n"
+        "import time as walltime\n"
+        "from time import time as tt\n"
+        "def span():\n"
+        "    t0 = time.time()\n"
+        "    t1 = walltime.time()\n"
+        "    t2 = tt()\n"
+        "    ok = time.perf_counter()\n"
+        "    return t1 - t0, t2, ok\n"
+        "def expired(req, now):\n"
+        "    return now >= req.deadline\n")
+    findings = lint_paths([obs], clock_roots=(obs,))
+    assert [f.rule for f in findings] == ["monotonic-clock"] * 3
+    lines = {int(f.where.rsplit(":", 1)[1]) for f in findings}
+    assert lines == {5, 6, 7}        # perf_counter and now= math pass
+    assert "perf_counter" in findings[0].message
+
+    # outside the clock roots the same file is none of the lint's
+    # business — scripts and tests may read the wall clock freely
+    assert lint_paths([obs]) == []
+
+
 def test_kernel_oracle_rule(tmp_path):
     kernels = tmp_path / "kernels"
     (kernels / "fancy").mkdir(parents=True)
