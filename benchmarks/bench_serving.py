@@ -853,6 +853,44 @@ def bench_spec(model, params, reqs, slots, spec_tokens, smoke):
     return record
 
 
+def bench_attrib(model, params, reqs, slots, chunk_tokens):
+    """Attribution section (repro.obs.attrib): two telemetry-on drains —
+    flat token-level and dense chunked — with the warmup-built roofline
+    cost model attached, recording MFU/MBU, padding-waste ratio and the
+    per-family predicted-vs-measured ratio.  These land in
+    ``BENCH_serving.json`` and are regression-gated by
+    ``scripts/bench_check.py`` (MFU/MBU dropping or the padding-waste
+    ratio rising by >15% vs the history median fails the gate)."""
+    out = {}
+    for mode, flat in (("flat", True), ("chunked", False)):
+        eng = Engine(model, params, max_slots=slots,
+                     chunk_tokens=chunk_tokens, flat=flat, telemetry=True)
+        eng.warmup()
+        for p, n in reqs:
+            eng.add_request(p, n)
+        eng.drain()
+        at = eng.telemetry()["attribution"]
+        tot = at["totals"]
+        out[mode] = {
+            "mfu": at["mfu"],
+            "mbu": at["mbu"],
+            "padding_waste_ratio": at["padding_waste_ratio"],
+            "roofline_fraction": at["roofline_fraction"],
+            "achieved_tokens_per_s": at["achieved_tokens_per_s"],
+            "device_fraction": tot["device_s"] / max(tot["wall_s"], 1e-12),
+            "families": {
+                label: {"steps": f["steps"], "fill": f["fill"],
+                        "predicted_vs_measured": f["predicted_vs_measured"]}
+                for label, f in sorted(at["families"].items())},
+        }
+        print(f"  attribution / {mode:<8} mfu {at['mfu']:.2e}  "
+              f"mbu {at['mbu']:.2e}  padding waste "
+              f"{at['padding_waste_ratio']:.3f} of device  "
+              f"roofline fraction {at['roofline_fraction']:.3f}  "
+              f"({len(at['families'])} families)")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm2-135m")
@@ -977,6 +1015,12 @@ def main(argv=None):
                                     args.chunk_tokens, args.smoke)
         results["flat_offline_throughput_ratio"] = \
             report["flat"]["offline_throughput_ratio"]
+
+    if all(t == "attn" for t in cfg.layer_types):
+        model, params = models[policies[0]]
+        report["attribution"] = bench_attrib(model, params, reqs,
+                                             args.slots, args.chunk_tokens)
+        results["attrib_flat_mfu"] = report["attribution"]["flat"]["mfu"]
 
     if not args.skip_spec and all(t == "attn" for t in cfg.layer_types):
         model, params = models[policies[0]]

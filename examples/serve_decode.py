@@ -102,8 +102,20 @@ def main():
                     help="run with telemetry on and dump the full "
                     "streaming-metrics registry snapshot (counters, "
                     "gauges, latency histograms) as JSON")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="run with telemetry on and write the single-file "
+                    "HTML attribution report (waterfall, per-family "
+                    "predicted-vs-measured, MFU/MBU, alerts) plus the "
+                    "Prometheus text exposition next to it (.prom)")
+    ap.add_argument("--slo-ttft", type=float, default=None,
+                    help="TTFT SLO target in seconds: arms the slo-burn "
+                    "monitor and defines goodput for first tokens")
+    ap.add_argument("--slo-itl", type=float, default=None,
+                    help="ITL SLO target in seconds (slo-burn monitor)")
     args = ap.parse_args()
-    want_obs = args.trace_out is not None or args.metrics_json is not None
+    want_obs = (args.trace_out is not None or args.metrics_json is not None
+                or args.report is not None or args.slo_ttft is not None
+                or args.slo_itl is not None)
 
     cfg = reduced_config(get_config(args.arch))
     shape = ShapeSpec("serve", args.max_len, args.slots, "decode")
@@ -119,6 +131,12 @@ def main():
                     prefix_cache=args.prefix_cache,
                     queue_limit=args.queue_limit,
                     telemetry=want_obs)
+    if want_obs and engine.continuous:
+        engine.obs.monitors.slo_ttft_s = args.slo_ttft
+        engine.obs.monitors.slo_itl_s = args.slo_itl
+        # warmup builds the per-family roofline cost model the
+        # attribution report prices padding waste / MFU / MBU against
+        engine.warmup()
     rng = np.random.default_rng(1)
     key = jax.random.PRNGKey(1)
 
@@ -216,7 +234,30 @@ def main():
               f"{sp['rollback_pages']} pages rolled back "
               f"({sp['drafter']})")
     if want_obs:
-        tel = engine.telemetry()
+        tel = engine.telemetry(report=args.report)
+        slo = es["slo"]
+        print(f"[serve] slo: goodput {slo['goodput_tokens']}/"
+              f"{slo['tokens_out']} tokens inside deadline "
+              f"({slo['goodput_ratio']:.2f}), p99s: "
+              f"ttft {slo['ttft_p99_s']:.4f}s, itl {slo['itl_p99_s']:.4f}s, "
+              f"e2e {slo['e2e_p99_s']:.4f}s")
+        at = tel["attribution"]
+        if "mfu" in at:
+            t = at["totals"]
+            print(f"[serve] attribution: wall {t['wall_s']:.3f}s = "
+                  f"sched {t['sched_s']:.3f} + device {t['device_s']:.3f} "
+                  f"+ draft {t['draft_s']:.3f} + host {t['host_s']:.3f}; "
+                  f"mfu {at['mfu']:.2e}, mbu {at['mbu']:.2e}, "
+                  f"padding waste {at['padding_waste_ratio']:.2f} of "
+                  f"device, roofline fraction {at['roofline_fraction']:.3f}")
+        if tel["alerts"]:
+            print(f"[serve] alerts ({len(tel['alerts'])}):")
+            for a in tel["alerts"]:
+                print(f"  [{a['severity']}] {a['kind']} @ step {a['step']}: "
+                      f"{a['message']}")
+        if args.report:
+            print(f"[serve] report -> {tel['report']['html']} + "
+                  f"{tel['report']['prom']}")
         print("[serve] latency percentiles (s):")
         print(f"  {'':<14}{'count':>6}{'p50':>10}{'p95':>10}{'p99':>10}"
               f"{'max':>10}")

@@ -21,6 +21,13 @@ default):
                                                  the fraction of
                                                  prefill work left
                                                  after cache hits)
+  attribution.{flat,chunked}.mfu / .mbu          dropped (model-
+                                                 FLOPs / bandwidth
+                                                 utilization)
+  attribution.{flat,chunked}.padding_waste_ratio **rose** (lower is
+                                                 better: padded-
+                                                 position device
+                                                 seconds over total)
   =============================================  =================
 
 Medians (not means) so one noisy CI run cannot shift the baseline, and
@@ -55,6 +62,16 @@ CHECKS = [
      ("speculative", "ngram", "decode_tokens_per_row_step"), True),
     ("prefix-cache prefill ratio (mono/greedy)",
      ("prefix_cache", "mono/greedy", "prefill_ratio"), False),
+    # attribution section (repro.obs.attrib): model-FLOPs and bandwidth
+    # utilization must not drop; the padding-waste ratio (padded-position
+    # device seconds / total device seconds) must not rise
+    ("attribution flat mfu", ("attribution", "flat", "mfu"), True),
+    ("attribution flat mbu", ("attribution", "flat", "mbu"), True),
+    ("attribution flat padding-waste ratio",
+     ("attribution", "flat", "padding_waste_ratio"), False),
+    ("attribution chunked mfu", ("attribution", "chunked", "mfu"), True),
+    ("attribution chunked padding-waste ratio",
+     ("attribution", "chunked", "padding_waste_ratio"), False),
 ]
 
 

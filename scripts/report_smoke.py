@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Attribution-report smoke: exposition formats + completeness, end to end.
+
+Run via ``scripts/tier1.sh --report`` (or directly with ``PYTHONPATH=src``).
+Drains a small deterministic request mix on a telemetry-enabled, warmed
+engine per configuration (chunked and flat — warmup builds the roofline
+cost model), writes the HTML/Prometheus report pair to a temp dir, and
+checks the PR headline invariants:
+
+  * attribution completeness — every per-step record's
+    ``sched + device + draft + host`` reconstructs the measured wall
+    within float tolerance, and the drain totals inherit the identity;
+  * the Prometheus text passes :func:`repro.obs.export.lint_prometheus`
+    (naming, TYPE-before-sample, sample uniqueness, counter ``_total``
+    naming and non-negativity);
+  * the HTML report is a self-contained single file (waterfall,
+    per-family table, latency percentiles, alert log; no ``<script>``);
+  * the cost model is warmup-only: it exists after ``warmup()``, covers
+    every family label the drain measured, and the drain triggers zero
+    post-warmup XLA traces with attribution on.
+
+Exits 1 on any violation, printing the offending config/check.
+"""
+
+import sys
+import tempfile
+
+import numpy as np
+
+
+CONFIGS = {
+    "chunked": dict(chunk_tokens=8, flat=False),
+    "flat": dict(chunk_tokens=8, token_budget=16),
+}
+
+
+def _requests(vocab, seed=11):
+    rng = np.random.Generator(np.random.Philox(seed))
+    lens, news = [5, 11, 8, 3], [6, 4, 9, 7]
+    return [(rng.integers(1, vocab, size=l).astype(np.int32), n)
+            for l, n in zip(lens, news)]
+
+
+def main() -> int:
+    from repro.analysis.runner import build_model
+    from repro.obs.export import lint_prometheus
+    from repro.serving.engine import Engine
+
+    model, params = build_model(slots=3)
+    reqs = _requests(model.cfg.vocab)
+    failures = 0
+
+    def fail(where, msg):
+        nonlocal failures
+        failures += 1
+        print(f"  FAIL  {where}: {msg}")
+
+    for cname, kwargs in CONFIGS.items():
+        eng = Engine(model, params, max_slots=3, page_tokens=8,
+                     telemetry=True, **kwargs)
+        eng.warmup()
+        if eng.cost_model is None:
+            fail(cname, "warmup() built no cost model")
+            continue
+        traces = sum(model.trace_counts.values())
+        for prompt, n in reqs:
+            eng.add_request(prompt, n)
+        eng.drain()
+
+        if sum(model.trace_counts.values()) != traces:
+            fail(cname, "attribution retraced post-warmup")
+
+        recs = list(eng.obs.step_records)
+        if not recs:
+            fail(cname, "drain produced no attribution records")
+        for i, rec in enumerate(recs):
+            parts = (rec["sched"] + rec["device"] + rec["draft"]
+                     + rec["host"])
+            if abs(parts - rec["wall"]) > 1e-9 + 1e-6 * rec["wall"]:
+                fail(cname, f"step {i}: components {parts:.9f} != "
+                            f"wall {rec['wall']:.9f}")
+        summary = eng.obs.attribution_summary()
+        tot = summary["totals"]
+        comp = (tot["sched_s"] + tot["device_s"] + tot["draft_s"]
+                + tot["host_s"])
+        if abs(comp - tot["wall_s"]) > 1e-9 + 1e-6 * tot["wall_s"]:
+            fail(cname, f"totals: components {comp:.9f} != "
+                        f"wall {tot['wall_s']:.9f}")
+        measured = set(summary["families"])
+        modelled = set(eng.cost_model.families)
+        if not measured <= modelled:
+            fail(cname, f"families outside the warmup cost model: "
+                        f"{sorted(measured - modelled)}")
+        if not (0 < summary.get("mfu", 0) < 1):
+            fail(cname, f"mfu out of range: {summary.get('mfu')}")
+
+        with tempfile.TemporaryDirectory() as tmp:
+            tel = eng.telemetry(report=f"{tmp}/drain")
+            prom = open(tel["report"]["prom"]).read()
+            page = open(tel["report"]["html"]).read()
+        problems = lint_prometheus(prom)
+        for p in problems:
+            fail(cname, f"prometheus lint: {p}")
+        for marker in ("Attribution waterfall", "Per-family predicted vs",
+                       "Latency percentiles", "Alerts"):
+            if marker not in page:
+                fail(cname, f"HTML report missing {marker!r}")
+        if "<script" in page or "http://" in page or "https://" in page:
+            fail(cname, "HTML report is not self-contained")
+
+        print(f"  ok    {cname}: {tot['steps']} steps, "
+              f"{len(measured)} families, mfu {summary['mfu']:.2e}, "
+              f"prom {len(prom)} B, html {len(page)} B")
+
+    if failures:
+        print(f"report_smoke: {failures} failure(s)")
+        return 1
+    print("report_smoke: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -150,6 +150,71 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, run: RunConfig,
     return rec
 
 
+def serving_cell(arch: str, run: RunConfig, *, slots: int = 4,
+                 max_len: int = 2048, page_tokens: int = 16,
+                 chunk_tokens: int = 64, spec_tokens: Optional[int] = None,
+                 out_dir: Optional[str] = None, verbose: bool = True) -> dict:
+    """Serving dry-run cell (the first bite of ROADMAP item 2): predict
+    the **flat paged decode step**'s cost before launch.  Builds the
+    engine with abstract parameters (``jax.eval_shape`` over ``init`` —
+    no weights are materialized) and the real paged-cache geometry, then
+    prices every flat ladder width with the same warmup cost model live
+    serving uses (:func:`repro.obs.attrib.build_cost_model`): roofline
+    compute/memory seconds per step plus the two paged-attention traffic
+    terms — per-step **KV-page gather bytes** (rows x block-table window
+    x per-token KV bytes over the cache pools) and the **block-table
+    gather bytes** themselves (rows x max_pages x 4B int32 indices)."""
+    from repro.models.model import build_model as _build
+    from repro.obs.attrib import build_cost_model, kv_page_bytes_per_token
+    from repro.serving.engine import Engine
+
+    t0 = time.time()
+    cfg = get_config(arch)
+    shape = ShapeSpec("serve_dryrun", max_len, slots, "decode")
+    model = _build(cfg, run, shape)
+    params = _abstract(model.init, jax.random.PRNGKey(0))
+    eng = Engine(model, params, prepack=False, max_slots=slots,
+                 page_tokens=page_tokens, chunk_tokens=chunk_tokens,
+                 spec_tokens=spec_tokens)
+    hw = query()
+    cm = build_cost_model(eng, hw=hw)
+    kv_tok = kv_page_bytes_per_token(eng.caches, eng.pool.num_pages,
+                                     eng.pool.page_tokens)
+    bt_bytes = eng.slots * eng.max_pages * 4        # int32 block table
+    rec = {
+        "status": "ok", "arch": arch, "kind": "serving-flat",
+        "slots": slots, "max_len": max_len,
+        "page_tokens": eng.pool.page_tokens,
+        "num_pages": eng.pool.num_pages,
+        "chunk_tokens": eng.chunk_tokens,
+        "token_budget": eng.token_budget,
+        "spec_tokens": spec_tokens,
+        "kv_bytes_per_token": kv_tok,
+        "block_table_gather_bytes": bt_bytes,
+        "block_table_gather_s": bt_bytes / hw.hbm_bw,
+        "cost_model": cm.to_dict(),
+        "build_s": round(time.time() - t0, 2),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} serving flat step ({slots} slots, "
+              f"max_len {max_len}, pages {eng.pool.num_pages} x "
+              f"{eng.pool.page_tokens}t, KV {kv_tok:.0f} B/token, "
+              f"block-table gather {bt_bytes} B/step):")
+        for label in sorted(cm.families):
+            fc = cm.families[label]
+            print(f"  {label:>18}: predicted {fc.predicted_s * 1e6:8.1f}us "
+                  f"({fc.bottleneck}-bound)  KV gather "
+                  f"{fc.kv_gather_bytes / 2 ** 20:7.2f} MiB "
+                  f"({fc.kv_gather_s * 1e6:7.1f}us at "
+                  f"{hw.hbm_bw / 1e9:.0f} GB/s)")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{arch}_serving_flat.json"),
+                  "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -162,11 +227,27 @@ def main():
     ap.add_argument("--no-fsdp", action="store_true")
     ap.add_argument("--microbatch", type=int, default=8)
     ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--serving", action="store_true",
+                    help="dry-run the flat paged decode step instead of "
+                         "the distributed train/prefill/decode cells")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=2048)
+    ap.add_argument("--page-tokens", type=int, default=16)
+    ap.add_argument("--chunk-tokens", type=int, default=64)
+    ap.add_argument("--spec-tokens", type=int, default=None)
     args = ap.parse_args()
 
     run = RunConfig(layout_policy=args.policy, propagate=not args.no_propagate,
                     fsdp=not args.no_fsdp, microbatch=args.microbatch)
     meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    if args.serving:
+        assert args.arch, "--serving needs --arch"
+        serving_cell(args.arch, run, slots=args.slots, max_len=args.max_len,
+                     page_tokens=args.page_tokens,
+                     chunk_tokens=args.chunk_tokens,
+                     spec_tokens=args.spec_tokens, out_dir=args.out)
+        return
 
     if args.all:
         todo = [(a, s) for a, s, ok, _ in cells() if ok]

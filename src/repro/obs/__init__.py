@@ -1,5 +1,6 @@
 """``repro.obs`` — serving observability: lifecycle tracing, streaming
-metrics, Perfetto trace export.
+metrics, performance attribution, anomaly monitors, Perfetto trace
+export, Prometheus/HTML exposition.
 
 Zero-dependency (stdlib only) and strictly host-side: every event is a
 Python method call timed with ``time.perf_counter()``; nothing here
@@ -57,6 +58,49 @@ only via ``Engine.telemetry(reset=True)``; lifetime metrics never.
 ``Engine.telemetry()`` is the one unified view: components' classic
 ``stats()`` dicts + the registry snapshot + headline percentiles.
 
+Performance attribution
+=======================
+
+:mod:`repro.obs.attrib` grounds the measured numbers in the paper's
+predictability story.  ``Engine.warmup()`` (telemetry on) builds a
+:class:`~repro.obs.attrib.StepCostModel` — one roofline-priced
+:class:`~repro.obs.attrib.FamilyCost` per compiled shape family on the
+engine's ladder, from abstract ``lower().compile()`` + XLA cost
+analysis plus an explicit KV-page-gather traffic term — and freezes it
+(the warmup-only contract: the per-step hot path only ever does dict
+lookups).  Each measured step is tagged with its family label(s) and
+its wall split into ``sched + device + draft + host`` — complete by
+construction, the components sum back to the wall (asserted in
+``tests/test_attrib.py``).  Drain roll-ups report MFU/MBU, padding
+waste (padded-minus-real grid positions priced at the family's
+roofline per-token cost), predicted-vs-measured per family, achieved-
+vs roofline-tokens/s, and goodput (tokens emitted inside
+``deadline_s``, surfaced via ``Engine.stats()["slo"]``).
+
+Anomaly monitors
+================
+
+:mod:`repro.obs.monitors` runs five host-side online detectors once per
+step — ``step-outlier`` (per-family device time vs rolling median),
+``preempt-storm``, ``prefix-churn``, ``queue-growth``, and ``slo-burn``
+(TTFT/ITL target violation rate) — emitting typed
+:class:`~repro.obs.monitors.Alert`\\ s that land in
+``Engine.telemetry()["alerts"]``, the ``alerts_emitted`` counter, and
+the ``monitor`` trace track.  One alert per excursion (re-arm on
+clearing), bounded retention.
+
+Exposition formats
+==================
+
+:mod:`repro.obs.export` renders the above without observing anything:
+:func:`~repro.obs.export.prometheus_text` (text format 0.0.4, linted by
+the pure-python :func:`~repro.obs.export.lint_prometheus`) and
+:func:`~repro.obs.export.html_report` (one self-contained file —
+attribution waterfall, per-family table, latency percentiles, alert
+log).  ``Engine.telemetry(report=path)`` writes the ``.html``/``.prom``
+pair; ``scripts/report_smoke.py`` (``tier1.sh --report``) smoke-checks
+both end to end.
+
 Trace file format
 =================
 
@@ -70,11 +114,19 @@ instants for the transition events above; ``"C"`` counters for pool
 occupancy and scheduler load.  Details in :mod:`repro.obs.trace`.
 """
 
+from repro.obs.attrib import (FamilyCost, StepCostModel, build_cost_model,
+                              summarize)
+from repro.obs.export import (html_report, lint_prometheus, prometheus_text,
+                              write_report)
 from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.monitors import Alert, Monitors
 from repro.obs.telemetry import NULL, NullTelemetry, Telemetry
 from repro.obs.trace import TraceRecorder
 
 __all__ = [
-    "Counter", "Gauge", "Histogram", "MetricsRegistry",
-    "NULL", "NullTelemetry", "Telemetry", "TraceRecorder",
+    "Alert", "Counter", "FamilyCost", "Gauge", "Histogram",
+    "MetricsRegistry", "Monitors", "NULL", "NullTelemetry",
+    "StepCostModel", "Telemetry", "TraceRecorder", "build_cost_model",
+    "html_report", "lint_prometheus", "prometheus_text", "summarize",
+    "write_report",
 ]

@@ -26,9 +26,13 @@ and :mod:`repro.obs.metrics` for the drain-vs-lifetime reset contract.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
+from repro.obs.attrib import finalize_summary, fresh_totals as _fresh_totals, \
+    update_aggregates
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.monitors import Monitors
 from repro.obs.trace import TraceRecorder
 
 __all__ = ["NullTelemetry", "Telemetry", "NULL"]
@@ -42,6 +46,9 @@ class NullTelemetry:
     enabled = False
     registry = None
     tracer = None
+    cost_model = None
+    monitors = None
+    alerts: tuple = ()
 
     def clock(self) -> float:
         return 0.0
@@ -62,7 +69,13 @@ class NullTelemetry:
     def step_begin(self) -> None: pass
     def device_span(self, t0) -> None: pass
     def draft_span(self, t0) -> None: pass
-    def step_end(self, scheduler, pool, finished) -> None: pass
+    def step_family(self, label, real, width) -> None: pass
+    def step_end(self, scheduler, pool, finished, now=None) -> None: pass
+
+    # -- attribution (repro.obs.attrib) --------------------------------
+    def attach_cost_model(self, cost_model) -> None: pass
+    def attribution_summary(self) -> dict: return {}
+    def reset_drain(self) -> None: pass
 
     # -- component instants --------------------------------------------
     def cow(self) -> None: pass
@@ -97,11 +110,22 @@ class Telemetry(NullTelemetry):
         self.h_itl = r.histogram("itl_s")
         self.h_queue_wait = r.histogram("queue_wait_s")
         self.h_e2e = r.histogram("e2e_s")
-        # per-step phase breakdown (seconds): wall = host + device + draft
+        # per-step phase breakdown (seconds).  Attribution completeness:
+        # wall == sched + device + draft + host by construction (the
+        # split is derived from the step's own span timestamps; asserted
+        # within tolerance in tests/test_attrib.py).  ``sched`` is the
+        # host time before the first device/draft span (admission, page
+        # growth, chunk planning); ``host`` is the interleaved + post-
+        # device remainder (verify loop, numpy staging).
         self.h_step_wall = r.histogram("step_wall_s")
         self.h_step_host = r.histogram("step_host_s")
         self.h_step_device = r.histogram("step_device_s")
         self.h_step_draft = r.histogram("step_draft_s")
+        self.h_step_sched = r.histogram("step_sched_s")
+        # padding waste: padded-minus-real grid positions priced at the
+        # step family's roofline per-token cost (needs the warmup-built
+        # cost model; observes 0.0 until one is attached)
+        self.h_step_waste = r.histogram("step_padding_waste_s")
         # event counters (drain-scoped: reset via Engine.telemetry(reset=True))
         self.c_queued = r.counter("requests_queued")
         self.c_admitted = r.counter("requests_admitted")
@@ -125,6 +149,8 @@ class Telemetry(NullTelemetry):
         self.c_draft_rows = r.counter("draft_rows")
         self.c_draft_tokens = r.counter("draft_tokens")
         self.c_steps = r.counter("steps")
+        self.c_goodput_tokens = r.counter("goodput_tokens")
+        self.c_alerts = r.counter("alerts_emitted")
         # momentary levels, sampled once per step
         self.g_queue_depth = r.gauge("queue_depth")
         self.g_running = r.gauge("running_slots")
@@ -136,6 +162,22 @@ class Telemetry(NullTelemetry):
         self._dev_s = 0.0
         self._draft_s = 0.0
         self._dev_window = None        # (t0, t1) of the latest device call
+        # attribution state (repro.obs.attrib): the warmup-frozen cost
+        # model, this step's family tags, a bounded window of per-step
+        # attribution records (tests + the HTML waterfall), and running
+        # per-family aggregates that survive the window bound
+        self.cost_model = None
+        self.monitors = Monitors()
+        self._families: list = []      # (label, real, width, dev_s) tags
+        self._first_span_t0: Optional[float] = None
+        self._last_dev = 0.0
+        self.step_records: Deque[dict] = deque(maxlen=4096)
+        self._agg_tot: dict = _fresh_totals()
+        self._agg_fams: Dict[str, dict] = {}
+
+    @property
+    def alerts(self):
+        return self.monitors.alerts
 
     # ------------------------------------------------------------------
     def clock(self) -> float:
@@ -294,21 +336,36 @@ class Telemetry(NullTelemetry):
         self._dev_s = 0.0
         self._draft_s = 0.0
         self._dev_window = None
+        self._families = []
+        self._first_span_t0 = None
+        self._last_dev = 0.0
 
     def device_span(self, t0: float) -> None:
         t1 = self._clock()
         self._dev_s += t1 - t0
         self._dev_window = (t0, t1)
+        self._last_dev = t1 - t0
+        if self._first_span_t0 is None:
+            self._first_span_t0 = t0
         if self.tracer:
             self.tracer.complete("engine", "device", t0, t1)
 
     def draft_span(self, t0: float) -> None:
         t1 = self._clock()
         self._draft_s += t1 - t0
+        if self._first_span_t0 is None:
+            self._first_span_t0 = t0
         if self.tracer:
             self.tracer.complete("engine", "draft", t0, t1)
 
-    def step_end(self, scheduler, pool, finished) -> None:
+    def step_family(self, label: str, real: int, width: int) -> None:
+        """Tag the device span just recorded with its compiled shape
+        family (called by the engine right after ``device_span``):
+        ``real`` useful tokens rode a ``width``-position grid."""
+        self._families.append((label, int(real), int(width),
+                               self._last_dev))
+
+    def step_end(self, scheduler, pool, finished, now=None) -> None:
         t1 = self._clock()
         running = list(scheduler.running.values())
         # token accounting first: one TTFT observation per request (its
@@ -321,10 +378,23 @@ class Telemetry(NullTelemetry):
             cur = len(req.out_tokens)
             if cur > rec["emitted"]:
                 if rec["emitted"] == 0:
-                    self.h_ttft.observe(t1 - rec["born"])
+                    ttft = t1 - rec["born"]
+                    self.h_ttft.observe(ttft)
+                    self.monitors.observe_ttft(ttft)
                 else:
-                    self.h_itl.observe(t1 - rec["last_emit"])
-                self.c_tokens_out.inc(cur - rec["emitted"])
+                    itl = t1 - rec["last_emit"]
+                    self.h_itl.observe(itl)
+                    self.monitors.observe_itl(itl)
+                emitted = cur - rec["emitted"]
+                self.c_tokens_out.inc(emitted)
+                # goodput: emissions land inside the request deadline.
+                # Judged on the *engine's* clock (``now``), the same one
+                # deadline cancellation uses — no deadline or no engine
+                # clock means every token counts.
+                deadline = getattr(req, "deadline_s", None)
+                if (deadline is None or now is None
+                        or now - req.arrival <= deadline):
+                    self.c_goodput_tokens.inc(emitted)
                 rec["emitted"] = cur
                 rec["last_emit"] = t1
         for req in finished:
@@ -340,16 +410,48 @@ class Telemetry(NullTelemetry):
             return
         t0 = self._step_t0 if self._step_t0 is not None else t1
         wall = t1 - t0
-        host = max(0.0, wall - self._dev_s - self._draft_s)
+        # wall decomposition — complete by construction: ``sched`` is
+        # host time before the first device/draft span, ``host`` is the
+        # remainder after subtracting the measured spans, so the four
+        # components sum back to wall exactly (up to float rounding;
+        # asserted in tests/test_attrib.py)
+        first = self._first_span_t0
+        sched = min(max(0.0, (first if first is not None else t1) - t0),
+                    wall)
+        host = max(0.0, wall - sched - self._dev_s - self._draft_s)
+        waste = 0.0
+        if self.cost_model is not None:
+            for label, real, width, _dev in self._families:
+                fc = self.cost_model.get(label)
+                if fc is not None:
+                    waste += (width - real) * fc.per_token_s
         self.c_steps.inc()
         self.h_step_wall.observe(wall)
         self.h_step_host.observe(host)
         self.h_step_device.observe(self._dev_s)
         self.h_step_draft.observe(self._draft_s)
+        self.h_step_sched.observe(sched)
+        self.h_step_waste.observe(waste)
+        rec = {"wall": wall, "sched": sched, "device": self._dev_s,
+               "draft": self._draft_s, "host": host,
+               "families": tuple(self._families)}
+        self.step_records.append(rec)
+        update_aggregates(self._agg_tot, self._agg_fams, rec,
+                          self.cost_model)
+        alerts = self.monitors.observe_step(
+            t=t1, scheduler=scheduler, telemetry=self,
+            families=self._families, device_s=self._dev_s)
+        for a in alerts:
+            self.c_alerts.inc()
+            if self.tracer:
+                self.tracer.instant("monitor", f"alert:{a.kind}", a.t,
+                                    args=a.to_dict())
         if self.tracer:
-            self.tracer.complete("engine", "step", t0, t1,
-                                 args={"running": len(running),
-                                       "finished": len(finished)})
+            self.tracer.complete(
+                "engine", "step", t0, t1,
+                args={"running": len(running),
+                      "finished": len(finished),
+                      "families": [f[0] for f in self._families]})
             if pool is not None:
                 self.tracer.counter("pool", "pages",
                                     {"used": pool.num_used,
@@ -357,6 +459,30 @@ class Telemetry(NullTelemetry):
             self.tracer.counter("scheduler", "load",
                                 {"waiting": len(scheduler.waiting),
                                  "running": len(running)}, t1)
+
+    # -- attribution (repro.obs.attrib) --------------------------------
+    def attach_cost_model(self, cost_model) -> None:
+        """Install the warmup-built :class:`~repro.obs.attrib.
+        StepCostModel`.  Called once, from ``Engine.warmup()`` — the
+        warmup-only contract: nothing per-step ever lowers or compiles."""
+        self.cost_model = cost_model
+
+    def attribution_summary(self) -> dict:
+        """The per-drain attribution roll-up (totals, per-family
+        predicted-vs-measured, MFU/MBU, goodput)."""
+        return finalize_summary(
+            self._agg_tot, self._agg_fams, self.cost_model,
+            goodput_tokens=self.c_goodput_tokens.value,
+            tokens_out=self.c_tokens_out.value)
+
+    def reset_drain(self) -> None:
+        """Drop drain-scoped state: metrics, per-step attribution
+        records and aggregates.  Lifetime metrics, the cost model, the
+        monitors' alert history and the trace all survive."""
+        self.registry.reset("drain")
+        self.step_records.clear()
+        self._agg_tot = _fresh_totals()
+        self._agg_fams = {}
 
     # -- component instants --------------------------------------------
     def cow(self) -> None:

@@ -147,6 +147,10 @@ class Engine:
         # every instrumentation point below is then a single no-op call
         self.obs = (telemetry if isinstance(telemetry, NullTelemetry)
                     else Telemetry() if telemetry else OBS_NULL)
+        # the roofline-grounded per-family step cost model; built once in
+        # warmup() when telemetry is live (repro.obs.attrib) — the
+        # warmup-only contract: nothing per-step ever lowers or compiles
+        self.cost_model = None
         self.params = (prepack_params(params, model.ctx)
                        if prepack and model.cfg.family != "encdec" else params)
         # static-batch path (encdec/vlm generate, throughput baselines);
@@ -447,6 +451,21 @@ class Engine:
         }
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()
+        if self.obs.enabled:
+            # the observability fragment of ROADMAP item 5: goodput
+            # (tokens emitted inside deadline_s) and the headline p99s —
+            # drain-scoped, like the registry metrics they read
+            good = self.obs.c_goodput_tokens.value
+            toks = self.obs.c_tokens_out.value
+            lat = self.obs.latency_summary()
+            out["slo"] = {
+                "goodput_tokens": good,
+                "tokens_out": toks,
+                "goodput_ratio": good / max(1, toks),
+                "ttft_p99_s": lat["ttft_s"]["p99"],
+                "itl_p99_s": lat["itl_s"]["p99"],
+                "e2e_p99_s": lat["e2e_s"]["p99"],
+            }
         if self.flat:
             fs = max(1, self._flat_steps)
             out["flat"] = {
@@ -480,7 +499,7 @@ class Engine:
             }
         return out
 
-    def telemetry(self, *, reset: bool = False) -> dict:
+    def telemetry(self, *, reset: bool = False, report=None) -> dict:
         """The unified observability view (continuous engine):
 
         - ``components`` — the classic per-component :meth:`stats` tree
@@ -495,12 +514,23 @@ class Engine:
           each metric ``drain`` or ``lifetime``.
         - ``latency`` — the headline percentile summaries (TTFT, ITL,
           queue wait, e2e), empty when telemetry is off.
+        - ``attribution`` — the per-drain roll-up from
+          :mod:`repro.obs.attrib`: wall-time components, per-family
+          predicted-vs-measured, MFU/MBU, padding waste, goodput.
+        - ``alerts`` — the monitor bank's typed findings
+          (:mod:`repro.obs.monitors`), as dicts, newest last.
 
-        ``reset=True`` zeroes the **drain-scoped registry metrics only**,
-        after the snapshot is taken — the explicit per-drain reset (see
-        :mod:`repro.obs.metrics`); nothing resets implicitly, so two
-        drains without a reset read as one window, never double-counted.
-        ``stats()`` counters are untouched by ``reset``."""
+        ``report="/path/base"`` additionally writes ``base.html`` (the
+        single-file attribution report) and ``base.prom`` (Prometheus
+        text exposition) via :func:`repro.obs.export.write_report`, and
+        returns the paths under ``"report"``.
+
+        ``reset=True`` zeroes the **drain-scoped registry metrics and
+        attribution aggregates only**, after the snapshot is taken — the
+        explicit per-drain reset (see :mod:`repro.obs.metrics`); nothing
+        resets implicitly, so two drains without a reset read as one
+        window, never double-counted.  ``stats()`` counters, the cost
+        model and the alert history are untouched by ``reset``."""
         obs = self.obs
         out = {
             "enabled": obs.enabled,
@@ -508,9 +538,16 @@ class Engine:
             "metrics": (obs.registry.snapshot()
                         if obs.registry is not None else {}),
             "latency": obs.latency_summary() if obs.enabled else {},
+            "attribution": obs.attribution_summary(),
+            "alerts": [a.to_dict() for a in obs.alerts],
         }
-        if reset and obs.registry is not None:
-            obs.registry.reset("drain")
+        if report is not None:
+            assert obs.enabled, \
+                "telemetry(report=...) needs a live telemetry engine"
+            from repro.obs.export import write_report
+            out["report"] = write_report(obs, report)
+        if reset:
+            obs.reset_drain()
         return out
 
     def step(self, *, now: Optional[float] = None, greedy: bool = True,
@@ -553,7 +590,7 @@ class Engine:
             self._retired_rids.add(req.rid)
             if self.drafter is not None:
                 self.drafter.forget(req.rid)
-        self.obs.step_end(self.scheduler, self.pool, finished)
+        self.obs.step_end(self.scheduler, self.pool, finished, now=now)
         return finished
 
     def _watchdog(self, now) -> None:
@@ -638,6 +675,9 @@ class Engine:
             td = self.obs.clock()
             rows = self._run_paged(token, bt, lens, counts, idx)
             self.obs.device_span(td)
+            self.obs.step_family(
+                f"verify[{b},{s}]" if spec else f"decode[{b},1]",
+                int(counts.sum()), b * s)
             for slot, req in list(running.items()):
                 self._verify_decode_row(req, drafts.get(slot, []), rows[slot],
                                         neff[slot], greedy, seed, finished)
@@ -712,6 +752,8 @@ class Engine:
         td = self.obs.clock()
         rows = self._run_paged(token, bt, lens, counts, idx)
         self.obs.device_span(td)
+        self.obs.step_family(f"chunk[{b},{s}]" + ("/verify" if spec else ""),
+                             total_new, b * s)
         for slot, req in list(running.items()):
             if req.status == "running":
                 self._verify_decode_row(req, drafts.get(slot, []), rows[slot],
@@ -827,6 +869,7 @@ class Engine:
         td = self.obs.clock()
         rows = self._run_flat(token, bt, row_ids, q_pos, idx)
         self.obs.device_span(td)
+        self.obs.step_family(f"flat[1,{w}]/k{k1}", total, w)
         rows = rows.reshape(self.slots, k1, -1)
         for slot, kind, n, req in segrefs:
             if kind == "decode":
@@ -1101,6 +1144,25 @@ class Engine:
 
     def warmup(self) -> None:
         """Pre-compile every step shape this engine can hit before taking
+        traffic (:meth:`_warmup_shapes`), then — when telemetry is live —
+        build the roofline-grounded per-family step cost model
+        (:func:`repro.obs.attrib.build_cost_model`): every just-compiled
+        family is lowered once more with ``ShapeDtypeStruct`` stand-ins
+        (fresh ``jax.jit`` wrappers, so the counted ``jit_step`` caches
+        and the zero-post-warmup-trace invariant are untouched) and priced
+        against the host's :class:`~repro.core.hardware.HardwareSpec`.
+        This is the **warmup-only cost-model contract**: prediction
+        happens here and only here; per-step attribution is dict lookups
+        on the frozen model, nothing per-step ever lowers, compiles, or
+        reaches a jitted function."""
+        self._warmup_shapes()
+        if self.obs.enabled:
+            from repro.obs.attrib import build_cost_model
+            self.cost_model = build_cost_model(self)
+            self.obs.attach_cost_model(self.cost_model)
+
+    def _warmup_shapes(self) -> None:
+        """Pre-compile every step shape this engine can hit before taking
         traffic — chunked: the fused ``[slots, c]`` step for every ladder
         shape ``c`` (``chunk_tokens`` halved down to ``m_r``) plus the
         ``[slots, 1]`` decode step; monolithic: the
@@ -1209,6 +1271,7 @@ class Engine:
             None)
         row = np.asarray(logits[0, 0, :])
         self.obs.device_span(td)
+        self.obs.step_family(f"prefill[1,{bucket}]", n, bucket)
         if self.nan_guard and not np.isfinite(row).all():
             self.scheduler.cancel(req.rid, "error", cache_pages=False)
             return False

@@ -370,6 +370,10 @@ class Scheduler:
         self.prefill_stall_steps = 0           # steps where a chunk got < ask
         self.spec_grow_fallbacks = 0           # speculative page asks shed
         self.peak_running = 0
+        self.peak_waiting = 0          # high-water queue depth (the
+                                       # queue-growth monitor's context:
+                                       # was a growth excursion also a
+                                       # lifetime high?)
         # preempt-resume accounting under the prefix cache: scalar totals
         # for stats() plus a bounded window of per-event records (the
         # cache contract asserted by tests/bench: recompute <=
@@ -451,6 +455,7 @@ class Scheduler:
         while i < n and self.waiting[i].arrival <= req.arrival:
             i += 1
         self.waiting.insert(i, req)
+        self.peak_waiting = max(self.peak_waiting, len(self.waiting))
         self.obs.request_queued(req)
 
     def admit(self, now: Optional[float] = None,
@@ -955,6 +960,7 @@ class Scheduler:
             "decoding": sum(r.status == "running" for r in running),
             "free_slots": len(self._free_slots),
             "peak_running": self.peak_running,
+            "peak_waiting": self.peak_waiting,
             "num_preemptions": self.num_preemptions,
             "num_pauses": self.num_pauses,
             "prefill_stall_steps": self.prefill_stall_steps,
